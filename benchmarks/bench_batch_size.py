@@ -1,0 +1,34 @@
+"""Paper Fig. 4: throughput / latency vs batch size (5 servers, 2 clients).
+
+Paper claims validated: WOC >= ~3x Cabinet at small-medium batches; WOC
+exceeds 300k Tx/s around batch 1000; Cabinet plateaus near 160k due to
+leader serialization."""
+
+from benchmarks.common import Claims, run_point, write_csv
+
+BATCHES = [10, 100, 500, 1000, 2000, 4000]
+
+
+def run(out_dir) -> list[str]:
+    claims = Claims()
+    rows = []
+    by = {}
+    for b in BATCHES:
+        tot = min(240_000, max(20_000, b * 50))
+        for proto in ("woc", "cabinet"):
+            r = run_point(protocol=proto, batch_size=b, total_ops=tot)
+            rows.append(r)
+            by[(proto, b)] = r["tx_s"]
+    write_csv(out_dir, "fig4_batch_size", rows)
+
+    ratio10 = by[("woc", 10)] / by[("cabinet", 10)]
+    claims.check("Fig4 small-batch advantage (paper ~3-5x)",
+                 ratio10 >= 2.5, f"batch=10 ratio={ratio10:.2f}")
+    claims.check("Fig4 WOC >300k Tx/s by batch 1000 (paper 300k+)",
+                 by[("woc", 1000)] > 250_000,
+                 f"woc@1000={by[('woc', 1000)]:.0f}")
+    cab_plateau = max(by[("cabinet", b)] for b in (1000, 2000, 4000))
+    claims.check("Fig4 Cabinet plateau ~160k (leader bound)",
+                 120_000 <= cab_plateau <= 220_000,
+                 f"cabinet plateau={cab_plateau:.0f}")
+    return claims.lines

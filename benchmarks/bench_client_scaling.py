@@ -1,0 +1,33 @@
+"""Paper Fig. 6: throughput vs concurrent clients (5 servers, batch 10).
+
+Paper claims validated: WOC grows with client count (distributed
+ingestion); Cabinet flat at its leader bound regardless of clients."""
+
+from benchmarks.common import Claims, run_point, write_csv
+
+CLIENTS = [2, 3, 5, 7, 9]
+
+
+def run(out_dir) -> list[str]:
+    claims = Claims()
+    rows, by = [], {}
+    for nc in CLIENTS:
+        for proto in ("woc", "cabinet"):
+            r = run_point(protocol=proto, batch_size=10, total_ops=20_000,
+                          n_clients=nc)
+            rows.append(r)
+            by[(proto, nc)] = r["tx_s"]
+    write_csv(out_dir, "fig6_client_scaling", rows)
+
+    growth = by[("woc", 9)] / by[("woc", 2)]
+    claims.check("Fig6 WOC grows with clients (paper 2.3x; queueing-"
+                 "regime difference noted in EXPERIMENTS.md)",
+                 growth >= 1.15, f"2->9 clients growth={growth:.2f}x")
+    cab = [by[("cabinet", c)] for c in CLIENTS]
+    claims.check("Fig6 Cabinet flat (paper: 15-16k at every client count)",
+                 max(cab) / min(cab) < 1.15,
+                 f"cabinet range {min(cab):.0f}-{max(cab):.0f}")
+    adv = min(by[("woc", c)] / by[("cabinet", c)] for c in CLIENTS)
+    claims.check("Fig6 WOC advantage at every client count",
+                 adv >= 2.0, f"min ratio={adv:.2f}")
+    return claims.lines

@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: run protocols, write CSVs, check claims."""
+
+from __future__ import annotations
+
+import pathlib
+import time
+
+from repro.core.runner import RunConfig, run
+
+
+def run_point(**kw) -> dict:
+    t0 = time.time()
+    art = run(RunConfig(**kw))
+    r = art.result
+    return {"protocol": r.protocol, "n": r.n_replicas,
+            "clients": r.n_clients, "batch": r.batch_size,
+            "tx_s": round(r.throughput_tx_s, 1),
+            "avg_ms": round(r.latency_avg_ms, 4),
+            "p50_ms": round(r.latency_p50_ms, 4),
+            "p99_ms": round(r.latency_p99_ms, 4),
+            "fast_frac": round(r.fast_path_frac, 4),
+            "ops": r.committed_ops,
+            "wall_s": round(time.time() - t0, 1)}
+
+
+def write_csv(out_dir, name: str, rows: list[dict]) -> pathlib.Path:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{name}.csv"
+    if rows:
+        cols = list(rows[0])
+        lines = [",".join(cols)]
+        lines += [",".join(str(r[c]) for c in cols) for r in rows]
+        path.write_text("\n".join(lines) + "\n")
+    return path
+
+
+class Claims:
+    """Collects paper-claim validations for the summary report."""
+
+    def __init__(self):
+        self.lines: list[str] = []
+
+    def check(self, name: str, ok: bool, detail: str):
+        mark = "PASS" if ok else "MISS"
+        self.lines.append(f"[{mark}] {name}: {detail}")
+        return ok

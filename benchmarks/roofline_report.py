@@ -1,0 +1,72 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+Usage: python -m benchmarks.roofline_report [--dir experiments/dryrun]
+Prints a markdown table per mesh + a bottleneck summary and flags the
+three §Perf hillclimb candidates (worst mfu-bound, most collective-bound,
+most paper-representative).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def load(dir_):
+    recs = []
+    for p in sorted(pathlib.Path(dir_).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_row(r):
+    if r["status"] != "OK":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | — | — | — | — | — | — | "
+                f"{r.get('reason', r.get('error', ''))[:60]} |")
+    rf = r["roofline"]
+    mem = r["memory"]["peak_estimate_per_device"] / 2**30
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"| {rf['t_compute_s']:.2e} | {rf['t_memory_s']:.2e} "
+            f"| {rf['t_collective_s']:.2e} | {rf['bottleneck']} "
+            f"| {rf['useful_flops_ratio']:.2f} | {rf['mfu_bound']:.3f} "
+            f"| {mem:.2f} GiB |")
+
+
+HEADER = ("| arch | shape | mesh | status | t_comp (s) | t_mem (s) "
+          "| t_coll (s) | bottleneck | useful/HLO | MFU bound | mem/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(HEADER)
+    for r in recs:
+        if args.mesh and r["mesh"] != args.mesh:
+            continue
+        print(fmt_row(r))
+
+    ok = [r for r in recs if r["status"] == "OK" and r["mesh"] == "16x16"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["mfu_bound"])
+        coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"]
+                   / max(max(r["roofline"]["t_compute_s"],
+                             r["roofline"]["t_memory_s"]), 1e-30))
+        over = [r for r in ok
+                if r["memory"]["peak_estimate_per_device"] > 16 * 2**30]
+        print(f"\nworst mfu_bound: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline']['mfu_bound']:.4f})")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']} "
+              f"(t_coll/t_dom="
+              f"{coll['roofline']['t_collective_s']:.2e})")
+        print(f"cells over 16 GiB/dev: "
+              f"{[(r['arch'], r['shape']) for r in over]}")
+
+
+if __name__ == "__main__":
+    main()

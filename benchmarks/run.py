@@ -1,0 +1,56 @@
+"""Benchmark driver: one module per paper table/figure + beyond-paper
+benches. Writes CSVs to experiments/bench/ and prints a paper-claim
+validation summary. ``python -m benchmarks.run [--quick] [--only NAME]``"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_batch_size, bench_client_scaling,
+                        bench_conflict_rate, bench_grad_quorum,
+                        bench_quorum_kernel, bench_server_scaling,
+                        bench_weights)
+
+SUITES = [
+    ("weights_tables", bench_weights),
+    ("quorum_kernel", bench_quorum_kernel),
+    ("grad_quorum", bench_grad_quorum),
+    ("conflict_rate", bench_conflict_rate),
+    ("batch_size", bench_batch_size),
+    ("client_scaling", bench_client_scaling),
+    ("server_scaling", bench_server_scaling),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    all_lines = []
+    t00 = time.time()
+    for name, mod in SUITES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        lines = mod.run(args.out)
+        for ln in lines:
+            print("  " + ln, flush=True)
+        print(f"  ({time.time()-t0:.0f}s)", flush=True)
+        all_lines += lines
+
+    misses = [l for l in all_lines if l.startswith("[MISS]")]
+    print(f"\n=== paper-claim validation: "
+          f"{len(all_lines) - len(misses)}/{len(all_lines)} PASS "
+          f"({time.time()-t00:.0f}s total) ===")
+    for m in misses:
+        print("  " + m)
+    return 1 if misses else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""repro: WOC (dual-path weighted object consensus) as a production JAX
+framework — protocol core, training-runtime coordination, 10-architecture
+model stack, multi-pod launch/dry-run/roofline tooling."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.checkpoint import manager
+from repro.checkpoint.manager import (AsyncCheckpointer, restore_latest,
+                                      save, save_shard)
+
+__all__ = ["manager", "AsyncCheckpointer", "restore_latest", "save",
+           "save_shard"]

@@ -1,0 +1,40 @@
+"""Architecture registry: ``get("<arch-id>")`` -> ModelConfig.
+
+Every assigned architecture is a module exporting ``CONFIG`` (the exact
+published hyperparameters) and ``smoke()`` (a reduced same-family config
+for CPU tests). Select with ``--arch <id>`` in the launchers.
+"""
+
+import importlib
+
+from repro.configs.base import ModelConfig, SHAPES, input_specs
+
+ARCHS = [
+    "qwen3_8b", "qwen3_1p7b", "nemotron_4_340b", "phi4_mini_3p8b",
+    "zamba2_1p2b", "qwen3_moe_235b_a22b", "granite_moe_3b_a800m",
+    "mamba2_780m", "seamless_m4t_medium", "internvl2_26b",
+]
+
+# canonical ids as assigned (dashes) -> module names
+ALIASES = {a.replace("_", "-").replace("-1p7b", "-1.7b")
+            .replace("-3p8b", "-3.8b").replace("-1p2b", "-1.2b"): a
+           for a in ARCHS}
+
+
+def get(name: str) -> ModelConfig:
+    mod = name.replace("-", "_").replace(".", "p")
+    if mod not in ARCHS:
+        mod = ALIASES.get(name, mod)
+    m = importlib.import_module(f"repro.configs.{mod}")
+    return m.CONFIG
+
+
+def smoke(name: str) -> ModelConfig:
+    mod = name.replace("-", "_").replace(".", "p")
+    if mod not in ARCHS:
+        mod = ALIASES.get(name, mod)
+    m = importlib.import_module(f"repro.configs.{mod}")
+    return m.smoke()
+
+
+__all__ = ["ARCHS", "get", "smoke", "ModelConfig", "SHAPES", "input_specs"]

@@ -1,0 +1,13 @@
+"""WOC as a first-class feature of the training runtime (layer B):
+
+  * grad_quorum    — weighted-quorum gradient commit (straggler cut)
+  * membership     — heartbeat view, leader, elastic resize epochs
+  * ckpt_consensus — slow-path checkpoint commit certificates
+"""
+
+from repro.coord.ckpt_consensus import CheckpointConsensus
+from repro.coord.grad_quorum import GradQuorum, quorum_allreduce
+from repro.coord.membership import Membership
+
+__all__ = ["CheckpointConsensus", "GradQuorum", "quorum_allreduce",
+           "Membership"]

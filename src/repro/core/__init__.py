@@ -1,0 +1,18 @@
+"""WOC protocol core: the paper's primary contribution.
+
+Public surface:
+  * weights         — geometric weight assignment + invariants (§3.1-3.2)
+  * quorum          — vectorized weighted-quorum commit math
+  * object_manager  — classification + routing (§3.3)
+  * woc / cabinet / epaxos / paxos — protocol node implementations (§4)
+  * simulator / runner — deterministic cluster simulation (§5 substrate)
+  * rsm             — replicated state machine + linearizability checking
+"""
+
+from repro.core import weights
+from repro.core.quorum import QuorumResult, quorum_commit
+from repro.core.object_manager import ObjectClass, ObjectManager, Route
+from repro.core.runner import PROTOCOLS, RunConfig, run
+
+__all__ = ["weights", "QuorumResult", "quorum_commit", "ObjectClass",
+           "ObjectManager", "Route", "PROTOCOLS", "RunConfig", "run"]

@@ -1,0 +1,200 @@
+"""Fast path: leaderless object-weighted consensus (paper §4.3, Algorithm 1).
+
+The coordinator (whichever replica the client contacted) drives one
+FAST_PROPOSE round per client batch:
+
+  FASTPATH(op, O):
+    1. conflict check at the coordinator        (Alg. 1 lines 2-3)
+    2. self-vote w_self^O, broadcast proposal   (lines 4-7)
+    3. accumulate FAST_ACCEPT weights           (lines 8-11)
+    4. commit at weight > T^O, broadcast        (lines 12-13)
+    5. CONFLICT reply or timeout -> slow path   (lines 14-16)
+
+Batches vectorize this with numpy: per-op weight rows are materialized at
+propose time so each FAST_ACCEPT folds in as one masked vector add — the
+same sort/prefix-sum/threshold math as :mod:`repro.core.quorum` (and the
+Pallas kernel), expressed incrementally.
+
+SOUNDNESS DEVIATION (documented in DESIGN.md): the paper's Theorem-2 sketch
+(in-flight map + leader mutex) leaves a race open — T^O-weighted and
+T^N-weighted quorums need not intersect, and a slow op registers at the
+followers only when SLOW_PROPOSE arrives, so a fast commit can slip through
+the propagation window and apply in different orders at different replicas.
+We close it by (a) requiring the *leader's* FAST_ACCEPT in every fast
+quorum (the leader knows every queued slow op the moment it is forwarded),
+and (b) carrying per-op dependencies on commit messages so replicas apply
+per-object in a consistent order (see BaseReplica.apply_commit). The fast
+path remains 1-RTT and coordinator-driven; the leader co-sign costs no
+extra round because the leader is one of the broadcast targets anyway.
+
+Diverted ops keep their in-flight registrations at accepting replicas until
+their eventual SLOW_COMMIT clears them (op_id-keyed): any concurrent fast
+attempt on those objects keeps seeing a conflict.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.simulator import Msg, Op
+
+OBSERVE_CAP = 64   # per-reply cap on per-object latency EMA updates
+
+
+@dataclasses.dataclass
+class FastBatch:
+    batch_id: int
+    ops: List[Op]
+    weights: np.ndarray      # (B, n) per-op object weights
+    threshold: np.ndarray    # (B,)
+    acc: np.ndarray          # (B,) accumulated weight
+    resolved: np.ndarray     # (B,) bool: committed or diverted
+    propose_time: float
+    leader: int              # leader id at propose time (must co-sign)
+    leader_voted: bool
+    deps: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    replied: set = dataclasses.field(default_factory=set)
+
+
+class FastPathMixin:
+    """Requires BaseReplica fields + ``self.om`` + slow-path ``forward_slow``
+    + ``finalize_op`` bookkeeping from WocReplica."""
+
+    def _init_fastpath(self):
+        self.fast_batches: Dict[int, FastBatch] = {}
+        self._fb_seq = itertools.count()
+
+    # -- coordinator side ------------------------------------------------------
+
+    def start_fast(self, ops: List[Op], now: float) -> None:
+        """Propose a batch of fast-path ops (Alg. 1 lines 4-7)."""
+        if not ops:
+            return
+        c = self.sim.costs
+        # per-op coordination cost (ordering, bookkeeping, quorum math);
+        # this is the CPU the paper says saturates replicas (§5.4)
+        self.sim.busy(self.node_id, c.c_coord * len(ops)
+                      * c.speed(self.node_id))
+        n = self.sim.n
+        B = len(ops)
+        wmat = np.empty((B, n))
+        for i, op in enumerate(ops):
+            wmat[i] = self.obj_weights.weights_for(op.obj)
+        thresh = wmat.sum(axis=1) / 2.0
+        leader = self.current_leader(now)
+        fb = FastBatch(
+            batch_id=next(self._fb_seq) | (self.node_id << 48),
+            ops=ops, weights=wmat, threshold=thresh,
+            acc=wmat[:, self.node_id].copy(),        # self-vote (line 4)
+            resolved=np.zeros(B, dtype=bool), propose_time=now,
+            leader=leader, leader_voted=(leader == self.node_id))
+        if fb.leader_voted:
+            for op in ops:
+                dep = self.last_slow.get(op.obj)
+                if dep is not None:
+                    fb.deps[op.op_id] = [dep]
+        self.fast_batches[fb.batch_id] = fb
+        others = [r for r in range(n) if r != self.node_id]
+        self.broadcast(others, "fast_propose",
+                       {"fb": fb.batch_id, "ops": ops}, size_ops=B)
+        # timeout scales with batch size: large batches legitimately spend
+        # longer in per-op parse/apply queues before replies return
+        self.set_timer(self.sim.costs.timeout + 50e-6 * B, "fast_timeout",
+                       {"fb": fb.batch_id})
+        # single-replica degenerate case: self-vote may already commit
+        self._fast_check_commit(fb, now)
+
+    def on_fast_accept(self, msg: Msg, now: float) -> None:
+        fb = self.fast_batches.get(msg.payload["fb"])
+        if fb is None or msg.src in fb.replied:
+            return
+        fb.replied.add(msg.src)
+        mask = msg.payload["mask"]                  # True = FAST_ACCEPT
+        live = ~fb.resolved
+        fb.acc[live & mask] += fb.weights[live & mask, msg.src]
+        if msg.src == fb.leader:
+            fb.leader_voted = True
+            for i, dep in msg.payload.get("deps", {}).items():
+                fb.deps[fb.ops[i].op_id] = [dep]
+        # latency observations feed the dynamic weight rule (§3.1)
+        lat = now - fb.propose_time
+        self.observe_node(msg.src, lat)
+        for op in fb.ops[:OBSERVE_CAP]:
+            self.obj_weights.observe(op.obj, msg.src, lat)
+        # first CONFLICT for an op -> slow path (Alg. 1 lines 14-15)
+        conflicted = live & ~mask
+        if conflicted.any():
+            self._divert(fb, conflicted, now)
+        self._fast_check_commit(fb, now)
+
+    def _fast_check_commit(self, fb: FastBatch, now: float) -> None:
+        if not fb.leader_voted:          # leader co-sign is mandatory
+            return
+        ready = (~fb.resolved) & (fb.acc > fb.threshold)   # strict crossing
+        if not ready.any():
+            self._fast_gc(fb)
+            return
+        fb.resolved |= ready
+        committed = [fb.ops[i] for i in np.flatnonzero(ready)]
+        deps = {op.op_id: fb.deps.get(op.op_id, []) for op in committed}
+        for op in committed:
+            op.path = op.path or "fast"
+            self.apply_commit(op, now, "fast", deps[op.op_id])
+        others = [r for r in range(self.sim.n) if r != self.node_id]
+        self.broadcast(others, "fast_commit",
+                       {"ops": committed, "deps": deps},
+                       size_ops=len(committed))
+        self.flush_credits()
+        self._fast_gc(fb)
+
+    def _divert(self, fb: FastBatch, which: np.ndarray, now: float) -> None:
+        fb.resolved |= which
+        ops = [fb.ops[i] for i in np.flatnonzero(which)]
+        self.forward_slow(ops, now)
+        self._fast_gc(fb)
+
+    def _fast_gc(self, fb: FastBatch) -> None:
+        if fb.resolved.all():
+            self.fast_batches.pop(fb.batch_id, None)
+
+    def on_fast_timeout(self, payload: dict, now: float) -> None:
+        fb = self.fast_batches.get(payload["fb"])
+        if fb is None:
+            return
+        pending = ~fb.resolved
+        if pending.any():                             # Alg. 1 line 16
+            self._divert(fb, pending, now)
+
+    # -- replica side -----------------------------------------------------------
+
+    def on_fast_propose(self, msg: Msg, now: float) -> None:
+        ops: List[Op] = msg.payload["ops"]
+        mask = np.zeros(len(ops), dtype=bool)
+        deps: Dict[int, int] = {}
+        am_leader = self.is_leader(now)
+        for i, op in enumerate(ops):
+            conflict = self.has_conflict(op.obj, op.op_id, now)
+            if am_leader and self._slow_obj_count.get(op.obj):
+                conflict = True        # a slow op is queued for this object
+            if not conflict:
+                mask[i] = True
+                self.register_inflight(op.obj, op.op_id, now)
+                if am_leader:
+                    dep = self.last_slow.get(op.obj)
+                    if dep is not None:
+                        deps[i] = dep
+        payload = {"fb": msg.payload["fb"], "mask": mask}
+        if am_leader:
+            payload["deps"] = deps
+        self.send(msg.src, "fast_accept", payload)
+
+    def on_fast_commit(self, msg: Msg, now: float) -> None:
+        ops: List[Op] = msg.payload["ops"]
+        deps = msg.payload.get("deps", {})
+        for op in ops:
+            self.apply_commit(op, now, "fast", deps.get(op.op_id))
+        self.flush_credits()

@@ -1,0 +1,163 @@
+"""Object Manager: classification, in-flight conflict map, dual-path routing.
+
+Paper §3.3 and §4.2: the Object Manager
+
+  * maintains per-object statistics (operation frequency, conflict rate,
+    access latency),
+  * classifies every object as INDEPENDENT / COMMON / HOT,
+  * tracks in-flight operations per object (the Theorem-2 machinery), and
+  * routes operations: independent & conflict-free -> fast path, everything
+    else -> slow path.
+
+The manager is deliberately a plain-Python control-plane component: in the
+discrete-event simulator there is one per replica (the "shared in-flight
+map maintained by all replicas" of Fig. 3 is each replica's local view,
+kept consistent by the commit broadcasts), and in the training runtime one
+per host. The *data-plane* math (quorum formation) lives in
+:mod:`repro.core.quorum` / the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional, Set
+
+
+class ObjectClass(enum.Enum):
+    INDEPENDENT = "independent"   # single-writer, fast-path eligible
+    COMMON = "common"             # shared, occasional conflicts -> slow path
+    HOT = "hot"                   # frequent simultaneous access -> slow path
+
+
+class Route(enum.Enum):
+    FAST = "fast"
+    SLOW = "slow"
+
+
+@dataclasses.dataclass
+class ObjectStats:
+    """Continuously-updated per-object access statistics (paper §3.3)."""
+
+    ops: int = 0                      # total operations observed
+    conflicts: int = 0                # ops that found another op in flight
+    distinct_clients: Set[int] = dataclasses.field(default_factory=set)
+    latency_ema_ms: float = 0.0       # commit latency EMA
+    last_access: float = 0.0          # sim-time of last access
+    concurrent_peak: int = 0          # max simultaneous in-flight ops seen
+
+    def conflict_rate(self) -> float:
+        return self.conflicts / self.ops if self.ops else 0.0
+
+
+@dataclasses.dataclass
+class InFlight:
+    """One in-flight operation on an object."""
+
+    op_id: int
+    client: int
+    coordinator: int
+    started: float
+
+
+class ObjectManager:
+    """Routing + conflict tracking for one replica.
+
+    Classification thresholds follow the paper's taxonomy:
+      * an object touched by >1 distinct client is at least COMMON,
+      * conflict_rate above ``hot_conflict_rate`` (or concurrent access
+        beyond ``hot_concurrency``) marks it HOT,
+      * objects may be *demoted* back toward INDEPENDENT when a sliding
+        window of accesses shows no conflicts (adaptive, §3.3 "adapts
+        continuously").
+    """
+
+    def __init__(self, *, hot_conflict_rate: float = 0.25,
+                 hot_concurrency: int = 3, demote_after_ops: int = 8,
+                 latency_decay: float = 0.9):
+        self.stats: Dict[int, ObjectStats] = {}
+        self.in_flight: Dict[int, Dict[int, InFlight]] = {}  # obj -> op_id -> rec
+        self.classes: Dict[int, ObjectClass] = {}
+        self.hot_conflict_rate = hot_conflict_rate
+        self.hot_concurrency = hot_concurrency
+        self.demote_after_ops = demote_after_ops
+        self.latency_decay = latency_decay
+        self._clean_streak: Dict[int, int] = {}  # conflict-free ops in a row
+
+    # -- classification ----------------------------------------------------
+
+    def classify(self, obj: int) -> ObjectClass:
+        return self.classes.get(obj, ObjectClass.INDEPENDENT)
+
+    def _reclassify(self, obj: int) -> None:
+        st = self.stats[obj]
+        streak = self._clean_streak.get(obj, 0)
+        if (st.conflict_rate() >= self.hot_conflict_rate
+                or st.concurrent_peak >= self.hot_concurrency):
+            cls = ObjectClass.HOT
+        elif len(st.distinct_clients) > 1:
+            cls = ObjectClass.COMMON
+        else:
+            cls = ObjectClass.INDEPENDENT
+        # adaptive demotion: a long conflict-free streak clears HOT/COMMON
+        if cls is not ObjectClass.INDEPENDENT and streak >= self.demote_after_ops:
+            st.conflicts = 0
+            st.concurrent_peak = len(self.in_flight.get(obj, {}))
+            cls = (ObjectClass.COMMON if len(st.distinct_clients) > 1
+                   else ObjectClass.INDEPENDENT)
+        self.classes[obj] = cls
+
+    # -- routing (Algorithm 1, lines 2-3) ----------------------------------
+
+    def route(self, obj: int, op_id: int, client: int, coordinator: int,
+              now: float) -> Route:
+        """Record the op as in flight and decide its path.
+
+        Fast path iff the object is classified INDEPENDENT *and* has no
+        conflicting in-flight operation (Theorem 2's cross-path guard).
+        """
+        st = self.stats.setdefault(obj, ObjectStats())
+        inflight = self.in_flight.setdefault(obj, {})
+        conflicted = bool(inflight)
+
+        st.ops += 1
+        st.distinct_clients.add(client)
+        st.last_access = now
+        st.concurrent_peak = max(st.concurrent_peak, len(inflight) + 1)
+        if conflicted:
+            st.conflicts += 1
+            self._clean_streak[obj] = 0
+        else:
+            self._clean_streak[obj] = self._clean_streak.get(obj, 0) + 1
+
+        inflight[op_id] = InFlight(op_id, client, coordinator, now)
+        self._reclassify(obj)
+
+        if conflicted or self.classes[obj] is not ObjectClass.INDEPENDENT:
+            return Route.SLOW
+        return Route.FAST
+
+    def has_conflict(self, obj: int, op_id: Optional[int] = None) -> bool:
+        """Does ``obj`` have an in-flight op other than ``op_id``?"""
+        inflight = self.in_flight.get(obj, {})
+        if op_id is None:
+            return bool(inflight)
+        return any(k != op_id for k in inflight)
+
+    def complete(self, obj: int, op_id: int, now: float) -> None:
+        """Commit/abort notification: remove from in-flight, fold latency."""
+        rec = self.in_flight.get(obj, {}).pop(op_id, None)
+        if rec is not None:
+            st = self.stats[obj]
+            lat = now - rec.started
+            d = self.latency_decay
+            st.latency_ema_ms = (d * st.latency_ema_ms + (1 - d) * lat
+                                 if st.ops > 1 else lat)
+
+    # -- introspection ------------------------------------------------------
+
+    def snapshot(self) -> Dict[int, ObjectClass]:
+        return dict(self.classes)
+
+    def inflight_count(self) -> int:
+        return sum(len(v) for v in self.in_flight.values())

@@ -1,0 +1,10 @@
+"""Classic majority-quorum MultiPaxos reference floor.
+
+Implementation-wise this is Cabinet with flat (uniform) weights — a quorum
+is any strict majority — so it lives next to :class:`CabinetReplica`; this
+module re-exports it under its own name for config/registry purposes.
+"""
+
+from repro.core.cabinet import PaxosReplica
+
+__all__ = ["PaxosReplica"]

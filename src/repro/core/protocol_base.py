@@ -1,0 +1,375 @@
+"""Shared replica machinery: in-flight map, weights, heartbeats, election.
+
+All four protocol implementations (WOC, Cabinet, EPaxos, MultiPaxos) extend
+:class:`BaseReplica`. It provides:
+
+  * an **in-flight map** ``obj -> {op_id: registered_time}`` with lazy
+    timeout GC (Theorem 2's shared conflict-tracking state, Fig. 3),
+  * **node-weight tracking** (latency EMA -> rank -> geometric weight,
+    paper §3.1 "slow path" weights / Cabinet §2.1),
+  * **object-weight tracking** (per-object latency EMA -> geometric weight,
+    paper §3.2) backed by numpy for event-loop speed,
+  * a heartbeat failure detector + rank-order **leader election**
+    (simplified Cabinet view change: the highest-weighted replica believed
+    alive is the leader; followers only accept proposals from their current
+    leader; idempotent RSM apply makes leader hand-off duplicate-safe).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import weights as W
+from repro.core.rsm import RSM
+from repro.core.simulator import Msg, Node, Simulation
+
+
+class ObjectWeightTable:
+    """Per-object latency EMA -> geometric weights (numpy, event-loop fast)."""
+
+    def __init__(self, n: int, r: float, node_ema: np.ndarray,
+                 decay: float = 0.85):
+        self.n = n
+        self.base = np.asarray(W.geometric_weights(n, r))  # descending by rank
+        self.decay = decay
+        self.ema: Dict[int, np.ndarray] = {}
+        self.node_ema = node_ema  # shared fallback: node-level latency EMA
+
+    def observe(self, obj: int, replica: int, latency: float) -> None:
+        e = self.ema.get(obj)
+        if e is None:
+            e = self.node_ema.copy()
+            self.ema[obj] = e
+        e[replica] = self.decay * e[replica] + (1 - self.decay) * latency
+
+    def weights_for(self, obj: int) -> np.ndarray:
+        e = self.ema.get(obj, self.node_ema)
+        order = np.argsort(e, kind="stable")      # fastest first
+        ranks = np.empty(self.n, dtype=np.int64)
+        ranks[order] = np.arange(self.n)
+        return self.base[ranks]
+
+    def threshold_for(self, obj: int) -> float:
+        return float(self.base.sum()) / 2.0        # T^O = sum(W^O)/2
+
+
+class BaseReplica(Node):
+    HB_INTERVAL = 10e-3
+    HB_TIMEOUT = 45e-3
+
+    def __init__(self, node_id: int, sim: Simulation, *, t_fail: int,
+                 steepness: Optional[float] = None, group_cap: int = 64):
+        super().__init__(node_id, sim)
+        n = sim.n
+        self.t_fail = t_fail
+        # slow-path group-commit cap: one consensus instance carries at most
+        # this many ops (= the experiment's client batch size, so Cabinet's
+        # per-client-batch instances and WOC's merged forwards amortize the
+        # leader round identically — "reordering ... within the same batch")
+        self.group_cap = group_cap
+        self.r = steepness if steepness is not None else W.solve_steepness(
+            n, max(1, min(t_fail, (n - 1) // 2)))
+        self.rsm = RSM()
+        # node-level latency EMA; initial ranking = replica id order (the
+        # simulator's speed() is non-decreasing in id, and a deployment
+        # would bootstrap from measured pings). A node is its own fastest
+        # responder (zero network distance): EMA[self] = 0, so a slow-path
+        # leader carries the top weight w_1 (paper Table 2) and a fast-path
+        # coordinator's self-vote is the heaviest for objects it serves.
+        self.node_ema = np.array(
+            [10e-3 * (1 + 0.01 * i) for i in range(n)], dtype=np.float64)
+        self.node_ema[node_id] = 0.0
+        self.node_base = np.asarray(W.geometric_weights(n, self.r))
+        self.obj_weights = ObjectWeightTable(n, self.r, self.node_ema)
+        # in-flight conflict map with lazy GC
+        self.in_flight: Dict[int, Dict[int, float]] = {}
+        self.gc_timeout = sim.costs.timeout * 4
+        # failure detector
+        self.last_hb = {i: 0.0 for i in range(n)}
+        self._hb_armed = False
+        # per-(client,batch) commit credits, coalesced per commit handler
+        self._credit_buf: Dict[tuple, int] = {}
+        # dependency-ordered apply: obj -> FIFO of (op, deps, path) waiting
+        # for their cross-path predecessors to be applied first (Theorem 2
+        # machinery — see docstring of deferred_apply)
+        self._obj_buffer: Dict[int, list] = {}
+        # leader-side: last slow-path op applied per object (fast commits on
+        # that object must order after it at every replica)
+        self.last_slow: Dict[int, int] = {}
+        # leader-side: count of queued/in-instance slow ops per object
+        self._slow_obj_count: Dict[int, int] = {}
+        # crash-recovery state transfer
+        self.recovering = False
+        self._recovery_buf: list = []
+        self._lead_after = 0.0       # no self-candidacy before this time
+
+    # -- weights -------------------------------------------------------------
+
+    def node_weights(self) -> np.ndarray:
+        order = np.argsort(self.node_ema, kind="stable")
+        ranks = np.empty(self.sim.n, dtype=np.int64)
+        ranks[order] = np.arange(self.sim.n)
+        return self.node_base[ranks]
+
+    def node_threshold(self) -> float:
+        return float(self.node_base.sum()) / 2.0
+
+    def observe_node(self, replica: int, latency: float, decay=0.85) -> None:
+        self.node_ema[replica] = (decay * self.node_ema[replica]
+                                  + (1 - decay) * latency)
+
+    # -- in-flight map (Theorem 2 machinery) ----------------------------------
+
+    def register_inflight(self, obj: int, op_id: int, now: float) -> None:
+        self.in_flight.setdefault(obj, {})[op_id] = now
+
+    def clear_inflight(self, obj: int, op_id: int) -> None:
+        d = self.in_flight.get(obj)
+        if d is not None:
+            d.pop(op_id, None)
+            if not d:
+                self.in_flight.pop(obj, None)
+
+    def has_conflict(self, obj: int, op_id: int, now: float) -> bool:
+        """Any live in-flight op on ``obj`` other than ``op_id``?"""
+        d = self.in_flight.get(obj)
+        if not d:
+            return False
+        expired = [k for k, t0 in d.items() if now - t0 > self.gc_timeout]
+        for k in expired:
+            del d[k]
+        if not d:
+            self.in_flight.pop(obj, None)
+            return False
+        return any(k != op_id for k in d)
+
+    # -- leader election -------------------------------------------------------
+    #
+    # Election rank is the STATIC deployment-wide ordering (replica id; the
+    # simulator's speed() is non-decreasing in id, so id 0 is the fastest
+    # node — Cabinet elects its top-weighted replica). The *dynamic* latency
+    # EMA only drives quorum/vote weights: in real Cabinet, weight changes
+    # are agreed through the log itself, so the election ranking every node
+    # uses must be a shared, stable view, not each node's private EMA.
+    # Liveness comes from an all-to-all heartbeat failure detector.
+
+    def weight_ranking(self) -> List[int]:
+        """Replica ids ordered by descending node weight (stable)."""
+        return list(np.argsort(self.node_ema, kind="stable"))
+
+    def current_leader(self, now: float) -> int:
+        candidate = not self.recovering and now >= self._lead_after
+        for r in range(self.sim.n):
+            if r == self.node_id and candidate:
+                return r
+            if r != self.node_id and now - self.last_hb[r] <= self.HB_TIMEOUT:
+                return r
+        return self.node_id if candidate else (self.node_id + 1) % self.sim.n
+
+    def is_leader(self, now: float) -> bool:
+        return self.current_leader(now) == self.node_id
+
+    def start_heartbeats(self) -> None:
+        if not self._hb_armed:
+            self._hb_armed = True
+            self.set_timer(self.HB_INTERVAL, "hb")
+
+    def on_protocol_timer(self, name: str, payload: dict, now: float) -> None:
+        pass
+
+    def on_heartbeat(self, msg: Msg, now: float) -> None:
+        self.last_hb[msg.src] = now
+
+    # -- crash recovery: state transfer before rejoining --------------------------
+    #
+    # A recovering replica's pre-crash in-flight/queue state is garbage and
+    # its RSM has holes for everything committed while it was down. It (a)
+    # wipes volatile protocol state, (b) buffers incoming commits, (c) pulls
+    # a snapshot from a live peer, then (d) installs it and replays the
+    # buffer (op_id-idempotent). It does not claim leadership until synced.
+
+    def on_recover(self, now: float) -> None:
+        self.recovering = True
+        self._recovery_buf = []
+        self.in_flight.clear()
+        self._obj_buffer.clear()
+        self._credit_buf.clear()
+        if hasattr(self, "slow_queue"):
+            self.slow_queue.clear()
+            self.slow_mutex = False
+            self.slow_inst = None
+            self._forwarded.clear()
+            self._slow_pending.clear()
+            self._slow_obj_count.clear()
+        if hasattr(self, "fast_batches"):
+            self.fast_batches.clear()
+        if hasattr(self, "pending"):
+            self.pending.clear()
+            self.op2batch.clear()
+        self._request_sync(now, attempt=0)
+
+    def _request_sync(self, now: float, attempt: int) -> None:
+        peer = (self.node_id + 1 + attempt) % self.sim.n
+        if peer == self.node_id:
+            peer = (peer + 1) % self.sim.n
+        self.send(peer, "sync_req", {})
+        self.set_timer(0.05, "sync_retry", {"attempt": attempt + 1})
+
+    def on_sync_req(self, msg: Msg, now: float) -> None:
+        # any live replica can serve catch-up; cost scales with state size
+        c = self.sim.costs
+        self.sim.busy(self.node_id, c.c_parse * len(self.rsm.applied_ops)
+                      * c.speed(self.node_id))
+        self.send(msg.src, "sync_state", {
+            "store": dict(self.rsm.store),
+            "applied": {k: list(v) for k, v in self.rsm.applied.items()},
+            "applied_ops": set(self.rsm.applied_ops),
+            "apply_count": self.rsm.apply_count,
+            "last_slow": dict(self.last_slow),
+            # the PENDING dep-ordered commit queue is part of the apply
+            # order: without it a recovered node applies later commits
+            # ahead of a blocked earlier one and diverges per-object
+            "obj_buffer": {k: list(v) for k, v in self._obj_buffer.items()},
+        }, size_ops=len(self.rsm.applied_ops))
+
+    def on_sync_state(self, msg: Msg, now: float) -> None:
+        if not self.recovering:
+            return
+        p = msg.payload
+        self.rsm.store = dict(p["store"])
+        self.rsm.applied.clear()
+        self.rsm.applied.update({k: list(v) for k, v in p["applied"].items()})
+        self.rsm.applied_ops = set(p["applied_ops"])
+        self.rsm.apply_count = p["apply_count"]
+        self.last_slow = dict(p["last_slow"])
+        self._obj_buffer = {k: list(v) for k, v in p["obj_buffer"].items()}
+        for obj, entries in self._obj_buffer.items():
+            for op, _, _ in entries:
+                self.set_timer(self.gc_timeout, "dep_timeout",
+                               {"obj": obj, "op_id": op.op_id})
+        self.recovering = False
+        buf, self._recovery_buf = self._recovery_buf, []
+        for op, deps, path in buf:
+            self.apply_commit(op, now, path, deps)
+        self.flush_credits()
+        # rejoin the failure detector only after a full detector period:
+        # reclaiming leadership immediately races the interim leader's
+        # in-flight instance (two leaders' commits could interleave in
+        # different orders at different replicas — observed in the
+        # crash+recover KV-store example before this guard)
+        self._lead_after = now + self.HB_TIMEOUT * 1.2
+        self.set_timer(self.HB_TIMEOUT * 1.2, "rejoin")
+
+    def on_rejoin(self, now: float) -> None:
+        self._hb_armed = False
+        self.start_heartbeats()
+
+
+    # -- dependency-ordered apply (cross-path consistency, Thm 2) -------------
+    #
+    # T^O-weighted fast quorums and T^N-weighted slow quorums need NOT
+    # intersect (the weightings differ), so per-object apply order across
+    # the two paths cannot come from quorum intersection. The leader is the
+    # serialization point: every fast quorum includes the leader's accept,
+    # and commit messages carry the op_ids that must apply first. Replicas
+    # buffer out-of-order commits per object (FIFO) with a timeout fallback
+    # for dependencies that never commit (e.g. a diverted fast op whose
+    # coordinator crashed).
+
+    def apply_commit(self, op, now: float, path: str,
+                     deps: Optional[List[int]] = None) -> None:
+        if self.recovering:
+            # no usable local state yet: buffer until the snapshot installs
+            self._recovery_buf.append((op, deps, path))
+            return
+        deps = [d for d in (deps or []) if d not in self.rsm.applied_ops
+                and d != op.op_id]
+        buf = self._obj_buffer.get(op.obj)
+        if deps or buf:
+            # FIFO per object: never overtake an earlier buffered commit
+            self._obj_buffer.setdefault(op.obj, []).append((op, deps, path))
+            self.set_timer(self.gc_timeout, "dep_timeout",
+                           {"obj": op.obj, "op_id": op.op_id})
+            return
+        if op.op_id not in self.rsm.applied_ops:
+            self._apply_now(op, now, path)
+        self._drain_obj(op.obj, now)
+        # NOTE: no flush_credits here — callers flush once per handler so
+        # per-batch credits coalesce into one client_reply message
+
+    def _apply_now(self, op, now: float, path: str) -> None:
+        c = self.sim.costs
+        self.sim.busy(self.node_id, c.c_apply * c.speed(self.node_id))
+        self.rsm.apply(op)
+        self.clear_inflight(op.obj, op.op_id)
+        if path == "slow":
+            self.last_slow[op.obj] = op.op_id
+        self.on_applied(op, now, path)
+
+    def on_applied(self, op, now: float, path: str) -> None:
+        """Hook for protocol-specific post-apply bookkeeping."""
+
+    def _drain_obj(self, obj: int, now: float) -> None:
+        buf = self._obj_buffer.get(obj)
+        while buf:
+            op, deps, path = buf[0]
+            deps = [d for d in deps if d not in self.rsm.applied_ops]
+            if deps:
+                buf[0] = (op, deps, path)
+                return
+            buf.pop(0)
+            if op.op_id not in self.rsm.applied_ops:
+                self._apply_now(op, now, path)
+        self._obj_buffer.pop(obj, None)
+
+    def on_timer(self, name: str, payload: dict, now: float) -> None:
+        if name == "sync_retry":
+            if self.recovering:
+                self._request_sync(now, payload["attempt"])
+            return
+        if name == "rejoin":
+            self.on_rejoin(now)
+            return
+        if name == "dep_timeout":
+            # force-apply in FIFO order: the missing dependency never
+            # committed (it will be retried as a fresh op if still wanted)
+            buf = self._obj_buffer.get(payload["obj"])
+            if buf and any(op.op_id == payload["op_id"] for op, _, _ in buf):
+                while buf:
+                    op, _, path = buf.pop(0)
+                    if op.op_id not in self.rsm.applied_ops:
+                        self._apply_now(op, now, path)
+                    if op.op_id == payload["op_id"]:
+                        break
+                if not buf:
+                    self._obj_buffer.pop(payload["obj"], None)
+                else:
+                    self._drain_obj(payload["obj"], now)
+                self.flush_credits()
+            return
+        if name == "hb":
+            for d in self.sim.replicas():
+                if d != self.node_id:
+                    self.send(d, "heartbeat", {})
+            self.set_timer(self.HB_INTERVAL, "hb")
+            return
+        self.on_protocol_timer(name, payload, now)
+
+    # -- client credit flow ------------------------------------------------------
+    # credits carry op_ids (not counts): with client retries the same op may
+    # be coordinated — and credited — by two replicas, and the client must
+    # be able to dedupe per op.
+
+    def credit_op(self, client: int, batch_id: int, op_id: int) -> None:
+        key = (client, batch_id)
+        self._credit_buf.setdefault(key, []).append(op_id)
+
+    def flush_credits(self) -> None:
+        if not self._credit_buf:
+            return
+        buf, self._credit_buf = self._credit_buf, {}
+        for (client, bid), op_ids in buf.items():
+            self.send(client, "client_reply",
+                      {"batch_id": bid, "op_ids": op_ids})

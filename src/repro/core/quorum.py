@@ -1,0 +1,117 @@
+"""Vectorized weighted-quorum mathematics (paper §3.1, §4.3-4.4).
+
+The computational hot spot of WOC is quorum formation: given, for a batch of
+operations, the time each replica's vote arrives and the weight each vote
+carries, find the earliest moment the accumulated weight crosses the
+consensus threshold ``T = sum(w)/2``.
+
+This module is the pure-jnp implementation (and the oracle for the Pallas
+kernel in ``repro.kernels.quorum_commit``): per operation,
+
+  1. sort replica vote-arrival times ascending,
+  2. gather vote weights into arrival order,
+  3. weighted prefix-sum,
+  4. first index where the prefix sum strictly exceeds T -> commit time,
+     quorum size. (Strict: at exactly T=sum/2 two disjoint vote sets could
+     both "commit" under >=, e.g. uniform weights with even n.)
+
+Non-voting replicas (crashed, timed out, or replying CONFLICT) are encoded
+with ``arrival = +inf`` so they sort to the end and never enter a quorum.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class QuorumResult(NamedTuple):
+    """Result of quorum formation for a batch of operations.
+
+    All fields have shape ``(ops,)`` except ``members`` (``(ops, n)``).
+    """
+
+    committed: jax.Array     # bool  — threshold was crossed by voting replicas
+    commit_time: jax.Array   # float — time of the crossing vote (inf if not)
+    quorum_size: jax.Array   # int32 — number of votes in the quorum
+    weight_sum: jax.Array    # float — accumulated weight at commit
+    members: jax.Array       # bool (ops, n) — replicas inside the quorum
+
+
+def quorum_commit(arrivals: jax.Array, weights: jax.Array,
+                  threshold: jax.Array | None = None) -> QuorumResult:
+    """Earliest weighted-quorum crossing per operation.
+
+    Args:
+      arrivals: (ops, n) vote arrival times; ``inf`` = no vote.
+      weights:  (ops, n) per-replica vote weight for this op's object.
+      threshold: (ops,) consensus threshold; defaults to ``sum(weights)/2``
+        (paper §3.1). NOTE: the default sums *all* weights, including
+        non-voters — the threshold is a property of the object, not of who
+        happens to answer.
+
+    Returns a :class:`QuorumResult`.
+    """
+    if arrivals.ndim == 1:
+        arrivals = arrivals[None]
+        weights = weights[None]
+    if threshold is None:
+        threshold = jnp.sum(weights, axis=-1) / 2.0
+
+    order = jnp.argsort(arrivals, axis=-1)               # earliest vote first
+    t_sorted = jnp.take_along_axis(arrivals, order, axis=-1)
+    w_sorted = jnp.take_along_axis(weights, order, axis=-1)
+    # votes that never arrive contribute no weight
+    w_sorted = jnp.where(jnp.isfinite(t_sorted), w_sorted, 0.0)
+    csum = jnp.cumsum(w_sorted, axis=-1)
+
+    # STRICT crossing: two disjoint sets can each reach exactly sum/2 when
+    # weights are uniform and n even — Theorem 1's intersection argument
+    # needs accumulated weight to strictly exceed half the total.
+    crossed = csum > threshold[..., None]                # (ops, n) monotone
+    committed = jnp.any(crossed & jnp.isfinite(t_sorted), axis=-1)
+    # first crossing index; argmax returns 0 when nothing crossed, so mask
+    k = jnp.argmax(crossed, axis=-1)
+    commit_time = jnp.where(
+        committed, jnp.take_along_axis(t_sorted, k[..., None], axis=-1)[..., 0],
+        INF)
+    quorum_size = jnp.where(committed, k + 1, 0).astype(jnp.int32)
+    weight_sum = jnp.where(
+        committed, jnp.take_along_axis(csum, k[..., None], axis=-1)[..., 0],
+        0.0)
+
+    # membership: replicas whose sorted position <= k and which actually voted
+    n = arrivals.shape[-1]
+    pos_in_sorted = jnp.argsort(order, axis=-1)          # position of replica i
+    members = (pos_in_sorted <= k[..., None]) & committed[..., None]
+    members = members & jnp.isfinite(arrivals)
+    del n
+    return QuorumResult(committed, commit_time, quorum_size, weight_sum,
+                        members)
+
+
+quorum_commit_jit = jax.jit(quorum_commit)
+
+
+def quorums_intersect(members_a: jax.Array, members_b: jax.Array) -> jax.Array:
+    """Theorem 1 checker: do two quorum membership masks intersect?
+
+    ``members_*``: (..., n) bool. Returns (...,) bool.
+    """
+    return jnp.any(members_a & members_b, axis=-1)
+
+
+def min_quorum_latency(latencies: jax.Array, weights: jax.Array) -> jax.Array:
+    """Lower bound on fast-path commit latency for an object.
+
+    Given one-way replica latencies (coordinator -> replica -> coordinator
+    counted as ``latencies``) and the object weight vector, the best possible
+    commit time is reached by waiting for replicas in latency order until the
+    threshold is crossed. Shape: latencies/weights (..., n) -> (...,).
+    """
+    res = quorum_commit(latencies, weights)
+    return res.commit_time

@@ -1,0 +1,125 @@
+"""Replicated state machine + safety checkers (paper §4.5 validation).
+
+Each replica owns an :class:`RSM` that applies committed operations to a
+key-value store and records the per-object apply sequence. Tests use:
+
+  * :func:`check_state_machine_safety` — every pair of replicas applied the
+    same value-sequence per object (prefix-closed: a replica may lag).
+  * :func:`check_linearizability` — for each object, the committed history
+    (invocation/response intervals + unique write values) admits a legal
+    linearization consistent with (a) real time and (b) the agreed apply
+    order. With unique write values this reduces to: the apply order must
+    not invert any pair of non-overlapping operations, and every read must
+    return the latest write ordered before it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.simulator import Op
+
+
+class RSM:
+    """Key-value replicated state machine for one replica."""
+
+    def __init__(self):
+        self.store: Dict[int, int] = {}
+        self.applied: Dict[int, List[int]] = defaultdict(list)  # obj -> values
+        self.applied_ops: set[int] = set()
+        self.apply_count = 0
+
+    def apply(self, op: Op) -> int | None:
+        """Apply a committed op; idempotent on op_id (re-delivery safe)."""
+        if op.op_id in self.applied_ops:
+            return self.store.get(op.obj)
+        self.applied_ops.add(op.op_id)
+        self.apply_count += 1
+        if op.kind == "w":
+            self.store[op.obj] = op.value
+            self.applied[op.obj].append(op.value)
+            return op.value
+        op.read_result = self.store.get(op.obj)
+        return op.read_result
+
+
+def check_state_machine_safety(rsms: Sequence[RSM]) -> Tuple[bool, str]:
+    """All replicas agree on the per-object value sequence (prefix rule)."""
+    objects = set()
+    for r in rsms:
+        objects |= set(r.applied)
+    for obj in objects:
+        seqs = [r.applied[obj] for r in rsms if obj in r.applied]
+        longest = max(seqs, key=len)
+        for s in seqs:
+            if s != longest[: len(s)]:
+                return False, (f"divergent apply order on object {obj}: "
+                               f"{s[:8]} vs {longest[:8]}")
+    return True, "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class HistoryEntry:
+    op_id: int
+    obj: int
+    kind: str
+    value: object          # write payload, or the value a read RETURNED
+    invoke: float
+    response: float
+
+
+def history_from_ops(ops: Sequence[Op]) -> List[HistoryEntry]:
+    return [HistoryEntry(o.op_id, o.obj, o.kind,
+                         o.value if o.kind == "w" else o.read_result,
+                         o.submit_time, o.commit_time)
+            for o in ops if o.commit_time >= 0]
+
+
+def check_linearizability(history: Sequence[HistoryEntry],
+                          apply_order: Dict[int, List[int]]
+                          ) -> Tuple[bool, str]:
+    """Check per-object linearizability against the agreed apply order.
+
+    ``apply_order``: obj -> list of written values in the order the RSM
+    applied them (from any up-to-date replica). Write values are unique, so
+    the apply order induces a total order on writes; linearizability then
+    requires that order to respect real time.
+    """
+    by_obj: Dict[int, List[HistoryEntry]] = defaultdict(list)
+    for h in history:
+        by_obj[h.obj].append(h)
+
+    for obj, entries in by_obj.items():
+        writes = [h for h in entries if h.kind == "w"]
+        order = apply_order.get(obj, [])
+        pos = {v: i for i, v in enumerate(order)}
+        # every committed write must have been applied
+        for w in writes:
+            if w.value not in pos:
+                return False, f"committed write {w.op_id} never applied"
+        # real-time order must be preserved by the apply order
+        ws = sorted(writes, key=lambda h: h.response)
+        for i, a in enumerate(ws):
+            for b in ws[i + 1:]:
+                if a.response < b.invoke and pos[a.value] > pos[b.value]:
+                    return False, (f"real-time inversion on obj {obj}: "
+                                   f"{a.op_id} -> {b.op_id}")
+        # reads: the read's serialization point is pinned by the value it
+        # returned (position in the write order; -1 = initial state). Every
+        # write that finished before the read began must be ordered at or
+        # before that point; every write that began after the read finished
+        # must be ordered after it.
+        for r in (h for h in entries if h.kind == "r"):
+            if r.value is not None and r.value not in pos:
+                return False, f"read {r.op_id} returned unapplied {r.value}"
+            rv = pos[r.value] if r.value is not None else -1
+            for w in writes:
+                if w.response < r.invoke and pos[w.value] > rv:
+                    return False, (f"stale read on obj {obj}: read {r.op_id} "
+                                   f"missed write {w.op_id}")
+                if r.response < w.invoke and pos[w.value] <= rv:
+                    return False, (f"future read on obj {obj}: read "
+                                   f"{r.op_id} saw write {w.op_id}")
+    return True, "ok"

@@ -1,0 +1,91 @@
+"""Experiment runner: build a cluster, drive open-loop clients, collect
+metrics. This is the harness behind every §5 benchmark."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Type
+
+from repro.core.cabinet import CabinetReplica, PaxosReplica
+from repro.core.epaxos import EPaxosReplica
+from repro.core.protocol_base import BaseReplica
+from repro.core.simulator import (Client, CostModel, RunResult, Simulation,
+                                  Workload, collect_metrics)
+from repro.core.woc import WocReplica
+
+PROTOCOLS: Dict[str, Type[BaseReplica]] = {
+    "woc": WocReplica,
+    "cabinet": CabinetReplica,
+    "epaxos": EPaxosReplica,
+    "paxos": PaxosReplica,
+}
+
+# protocols whose clients must contact the single (initial) leader
+LEADER_BASED = {"cabinet", "paxos"}
+
+
+@dataclasses.dataclass
+class RunConfig:
+    protocol: str = "woc"
+    n_replicas: int = 5
+    n_clients: int = 2
+    batch_size: int = 10
+    max_inflight: int = 5               # paper §5.1
+    total_ops: int = 40_000             # across all clients
+    t_fail: int = 1
+    workload: Workload = dataclasses.field(default_factory=Workload)
+    costs: CostModel = dataclasses.field(default_factory=CostModel)
+    seed: int = 0
+    crash_at: Optional[float] = None    # crash the initial leader at t
+    recover_at: Optional[float] = None
+    sim_time_cap: float = 300.0
+
+
+@dataclasses.dataclass
+class RunArtifacts:
+    result: RunResult
+    sim: Simulation
+    replicas: List[BaseReplica]
+    clients: List[Client]
+
+
+def run(cfg: RunConfig) -> RunArtifacts:
+    sim = Simulation(cfg.n_replicas, cfg.costs, seed=cfg.seed)
+    cls = PROTOCOLS[cfg.protocol]
+    t = max(1, min(cfg.t_fail, (cfg.n_replicas - 1) // 2))
+    replicas = [cls(i, sim, t_fail=t, group_cap=max(cfg.batch_size, 1))
+                for i in range(cfg.n_replicas)]
+    for rep in replicas:
+        sim.add_node(rep)
+        rep.start_heartbeats()
+
+    total_batches = max(1, cfg.total_ops // max(1, cfg.batch_size))
+    base, rem = divmod(total_batches, cfg.n_clients)
+
+    def make_target(ci: int):
+        if cfg.protocol in LEADER_BASED:
+            return lambda k: 0                       # initial leader
+        return lambda k, ci=ci: (ci + k) % cfg.n_replicas  # round-robin
+
+    clients = []
+    for ci in range(cfg.n_clients):
+        c = Client(cfg.n_replicas + ci, sim, batch_size=cfg.batch_size,
+                   max_inflight=cfg.max_inflight, workload=cfg.workload,
+                   target_fn=make_target(ci),
+                   total_batches=max(1, base + (1 if ci < rem else 0)),
+                   value_seed=cfg.seed)
+        sim.add_node(c)
+        clients.append(c)
+
+    if cfg.crash_at is not None:
+        sim.crash(0, cfg.crash_at)
+    if cfg.recover_at is not None:
+        sim.recover(0, cfg.recover_at)
+
+    for c in clients:
+        c.start()
+    sim.run(until=cfg.sim_time_cap, stop=lambda: all(c.done() for c in clients))
+
+    result = collect_metrics(cfg.protocol, sim, clients, cfg.batch_size,
+                             t_start=0.0)
+    return RunArtifacts(result, sim, replicas, clients)

@@ -1,0 +1,452 @@
+"""Deterministic discrete-event cluster simulator (paper §5 substrate).
+
+The paper evaluates WOC against Cabinet on 3-9 VM clusters with open-loop
+clients. This container has no cluster, so we reproduce §5 with a
+discrete-event simulation whose cost model captures exactly the effects the
+paper measures:
+
+  * per-message CPU costs at each replica (recv / send), scaled by a
+    per-replica heterogeneity factor — the reason weighted quorums help;
+  * per-operation coordination cost paid by whichever replica *coordinates*
+    an operation (ordering, bookkeeping, "quorum computation" — §5.4
+    attributes replica saturation to this) — the reason a single leader
+    becomes the bottleneck and WOC's distributed coordination scales;
+  * per-operation parse/apply costs paid by every replica (SMR replication
+    floor — no protocol can beat it);
+  * heterogeneous network one-way delays with deterministic hash jitter.
+
+Replicas process messages from a FIFO queue one at a time (busy_until
+tracking); outgoing sends occupy the sender (fan-out is not free — this is
+what saturates Cabinet's leader). Everything is deterministic given the
+seed: simulations are exactly reproducible.
+
+Entity ids: replicas are ``0..n-1``; clients are ``n..n+m-1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """CPU / network constants, in seconds. Defaults calibrated so that the
+    5-server / 2-client baseline lands in the paper's Tx/s ballpark."""
+
+    c_recv: float = 25e-6         # fixed cost to ingest one message
+    c_send: float = 15e-6         # fixed cost to emit one message
+    c_parse: float = 0.15e-6      # per-op cost to deserialize a batch
+    c_coord: float = 4e-6         # per-op cost at the COORDINATING replica
+    c_apply: float = 1.5e-6       # per-op cost to apply at commit (everyone)
+    net_base: float = 150e-6      # one-way network delay replica<->replica
+    net_client: float = 250e-6    # one-way delay client<->replica
+    net_jitter: float = 60e-6     # uniform jitter bound
+    timeout: float = 30e-3        # fast-path / election timeout
+
+    # Heterogeneity: mild CPU spread + strongly heterogeneous network
+    # distance (a geo-distributed deployment — §2.3's multi-region story).
+    # Weighted quorums pay off by *not waiting* for far/slow replicas.
+    speeds: Tuple[float, ...] = (1.0, 1.05, 1.1, 1.15, 1.2, 1.25, 1.3,
+                                 1.35, 1.4)
+    net_dist: Tuple[float, ...] = (0.0, 30e-6, 60e-6, 90e-6, 120e-6,
+                                   150e-6, 180e-6, 210e-6, 240e-6)
+
+    def speed(self, replica: int) -> float:
+        return self.speeds[replica % len(self.speeds)]
+
+    def dist(self, replica: int) -> float:
+        return self.net_dist[replica % len(self.net_dist)]
+
+
+def _hash_uniform(*keys: int) -> float:
+    """Deterministic uniform [0,1) from integer keys (stable across runs)."""
+    h = hashlib.blake2b(np.array(keys, dtype=np.int64).tobytes(),
+                        digest_size=8).digest()
+    return int.from_bytes(h, "little") / 2**64
+
+
+# ---------------------------------------------------------------------------
+# Messages and operations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Op:
+    op_id: int
+    client: int
+    obj: int
+    kind: str = "w"            # "w" | "r"
+    value: int = 0
+    submit_time: float = 0.0
+    commit_time: float = -1.0
+    path: str = ""             # "fast" | "slow" (filled at commit)
+    read_result: object = None # for reads: value returned at the
+                               # serialization point (same at every replica
+                               # because per-object apply order is agreed)
+
+
+@dataclasses.dataclass
+class Msg:
+    kind: str
+    src: int
+    dst: int
+    payload: dict
+    size_ops: int = 0          # number of ops carried (drives c_parse)
+
+
+class Node:
+    """Base class for replicas and clients. Subclasses implement handlers."""
+
+    def __init__(self, node_id: int, sim: "Simulation"):
+        self.node_id = node_id
+        self.sim = sim
+
+    def on_message(self, msg: Msg, now: float) -> None:
+        handler = getattr(self, "on_" + msg.kind.lower(), None)
+        if handler is None:
+            raise ValueError(f"{type(self).__name__} has no handler for "
+                             f"{msg.kind}")
+        handler(msg, now)
+
+    def on_timer(self, name: str, payload: dict, now: float) -> None:
+        pass
+
+    # -- convenience --------------------------------------------------------
+
+    def send(self, dst: int, kind: str, payload: dict, size_ops: int = 0):
+        self.sim.post(Msg(kind, self.node_id, dst, payload, size_ops))
+
+    def broadcast(self, dsts: Sequence[int], kind: str, payload: dict,
+                  size_ops: int = 0):
+        for d in dsts:
+            self.send(d, kind, payload, size_ops)
+
+    def set_timer(self, delay: float, name: str, payload: dict | None = None):
+        self.sim.set_timer(self.node_id, delay, name, payload or {})
+
+
+# ---------------------------------------------------------------------------
+# The event loop
+# ---------------------------------------------------------------------------
+
+class Simulation:
+    """Event loop with FIFO service queues and deterministic jitter."""
+
+    def __init__(self, n_replicas: int, costs: CostModel | None = None,
+                 seed: int = 0):
+        self.n = n_replicas
+        self.costs = costs or CostModel()
+        self.seed = seed
+        self.now = 0.0
+        self.nodes: Dict[int, Node] = {}
+        self._heap: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self._busy_until: Dict[int, float] = {}
+        self._msg_seq = itertools.count()
+        self._link_last: Dict[Tuple[int, int], float] = {}  # FIFO per link
+        self.crashed: set[int] = set()
+        self.stats_messages = 0
+        self.stats_events = 0
+
+    # -- wiring --------------------------------------------------------------
+
+    def add_node(self, node: Node) -> None:
+        self.nodes[node.node_id] = node
+        self._busy_until[node.node_id] = 0.0
+
+    def replicas(self) -> List[int]:
+        return [i for i in range(self.n) if i not in self.crashed]
+
+    # -- cost helpers ---------------------------------------------------------
+
+    def _is_replica(self, node_id: int) -> bool:
+        return node_id < self.n
+
+    def _net_delay(self, src: int, dst: int) -> float:
+        c = self.costs
+        base = (c.net_base if self._is_replica(src) and self._is_replica(dst)
+                else c.net_client)
+        for e in (src, dst):
+            if self._is_replica(e):
+                base += c.dist(e)
+        jit = _hash_uniform(self.seed, src, dst, next(self._msg_seq)) \
+            * c.net_jitter
+        return base + jit
+
+    def _recv_cost(self, node_id: int, msg: Msg) -> float:
+        c = self.costs
+        if not self._is_replica(node_id):
+            return 1e-6  # clients are not the bottleneck under study
+        return (c.c_recv + c.c_parse * msg.size_ops) * c.speed(node_id)
+
+    def _send_cost(self, node_id: int) -> float:
+        if not self._is_replica(node_id):
+            return 1e-6
+        return self.costs.c_send * self.costs.speed(node_id)
+
+    def busy(self, node_id: int, seconds: float) -> None:
+        """Charge CPU time to a node (per-op coordination / apply costs)."""
+        self._busy_until[node_id] = (
+            max(self._busy_until[node_id], self.now) + seconds)
+
+    # -- event posting --------------------------------------------------------
+
+    def post(self, msg: Msg) -> None:
+        """Send a message: charge the sender, delay, enqueue arrival."""
+        if msg.src in self.crashed or msg.dst in self.crashed:
+            return
+        send_done = max(self._busy_until[msg.src], self.now) \
+            + self._send_cost(msg.src)
+        self._busy_until[msg.src] = send_done
+        arrive = send_done + self._net_delay(msg.src, msg.dst)
+        # per-link FIFO delivery (TCP semantics): messages on one connection
+        # never reorder, which real protocol implementations rely on
+        link = (msg.src, msg.dst)
+        arrive = max(arrive, self._link_last.get(link, 0.0) + 1e-9)
+        self._link_last[link] = arrive
+        heapq.heappush(self._heap, (arrive, next(self._seq), "arrive", msg))
+        self.stats_messages += 1
+
+    def set_timer(self, node_id: int, delay: float, name: str,
+                  payload: dict) -> None:
+        heapq.heappush(self._heap, (self.now + delay, next(self._seq),
+                                    "timer", (node_id, name, payload)))
+
+    def crash(self, node_id: int, at: float) -> None:
+        heapq.heappush(self._heap, (at, next(self._seq), "crash", node_id))
+
+    def recover(self, node_id: int, at: float) -> None:
+        heapq.heappush(self._heap, (at, next(self._seq), "recover", node_id))
+
+    # -- run ------------------------------------------------------------------
+
+    def run(self, until: float = float("inf"),
+            stop: Optional[Callable[[], bool]] = None,
+            max_events: int = 50_000_000) -> float:
+        """Event loop. ``now`` is strictly monotone: message arrival and
+        message processing-completion are separate events, so a busy node's
+        deferred processing never drags the global clock backwards."""
+        while self._heap:
+            if stop is not None and stop():
+                break
+            t, _, kind, item = heapq.heappop(self._heap)
+            if t > until:
+                self.now = until
+                break
+            self.now = t
+            self.stats_events += 1
+            if self.stats_events > max_events:
+                raise RuntimeError("simulation event budget exceeded")
+            if kind == "crash":
+                self.crashed.add(item)
+            elif kind == "recover":
+                self.crashed.discard(item)
+                self._busy_until[item] = t
+                hook = getattr(self.nodes.get(item), "on_recover", None)
+                if hook is not None:
+                    hook(t)
+            elif kind == "timer":
+                node_id, name, payload = item
+                if node_id not in self.crashed:
+                    self.nodes[node_id].on_timer(name, payload, t)
+            elif kind == "arrive":
+                msg: Msg = item
+                if msg.dst not in self.crashed:
+                    # FIFO service: start when the node frees up
+                    start = max(t, self._busy_until[msg.dst])
+                    done = start + self._recv_cost(msg.dst, msg)
+                    self._busy_until[msg.dst] = done
+                    heapq.heappush(self._heap,
+                                   (done, next(self._seq), "proc", msg))
+            else:  # proc — handler runs at processing completion time
+                msg = item
+                if msg.dst not in self.crashed:
+                    self.nodes[msg.dst].on_message(msg, t)
+        return self.now
+
+
+# ---------------------------------------------------------------------------
+# Open-loop clients (paper §5.1: max 5 in-flight batches)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Operation mix (paper §5.1 default: 90/5/5 independent/common/hot)."""
+
+    p_independent: float = 0.90
+    p_common: float = 0.05
+    p_hot: float = 0.05
+    n_common_objects: int = 64
+    n_hot_objects: int = 4
+    reads_fraction: float = 0.0
+
+    def sample_object(self, client: int, rng: np.random.Generator) -> int:
+        u = rng.random()
+        if u < self.p_independent:
+            # private namespace per client, wide enough that birthday
+            # self-collisions stay negligible even at batch 4000
+            return (client << 24) | int(rng.integers(0, 1 << 20))
+        if u < self.p_independent + self.p_common:
+            return (1 << 60) | int(rng.integers(0, self.n_common_objects))
+        return (1 << 61) | int(rng.integers(0, self.n_hot_objects))
+
+
+class Client(Node):
+    """Open-loop batch generator with bounded in-flight *operations*.
+
+    Flow control is per-op (``max_inflight * batch_size`` op slots), so a
+    few slow-path stragglers consume only their own slots instead of
+    gating all submission — this is what "open-loop with a max in-flight
+    cap" (§5.1) means. Unacked batches are retried against a different
+    replica after ``RETRY`` seconds (idempotent op ids make this safe),
+    which is how clients fail over from a crashed coordinator/leader.
+    """
+
+    RETRY = 0.25
+
+    def __init__(self, node_id: int, sim: Simulation, *, batch_size: int,
+                 max_inflight: int, workload: Workload,
+                 target_fn: Callable[[int], int], total_batches: int,
+                 value_seed: int = 0):
+        super().__init__(node_id, sim)
+        self.batch_size = batch_size
+        self.max_inflight_ops = max_inflight * batch_size
+        self.workload = workload
+        self.target_fn = target_fn   # attempt counter -> replica to contact
+        self.total = total_batches
+        self.submitted = 0
+        self.completed_ops = 0
+        self.inflight_ops = 0
+        self.rng = np.random.default_rng((sim.seed << 16) ^ node_id)
+        self.ops: List[Op] = []      # every op this client created
+        self._open: Dict[int, dict] = {}   # batch_id -> {ops, acked, attempt}
+        self._next_op = itertools.count()
+        self._next_batch = itertools.count()
+        self.value_seed = value_seed
+        self._suspect: Dict[int, float] = {}   # replica -> suspicion expiry
+
+    def _pick_target(self, k: int) -> int:
+        t = self.target_fn(k)
+        for _ in range(self.sim.n):
+            if self._suspect.get(t, 0.0) < self.sim.now:
+                return t
+            t = (t + 1) % self.sim.n
+        return t
+
+    def start(self) -> None:
+        self._maybe_submit()
+
+    def _maybe_submit(self) -> None:
+        while (self.submitted < self.total
+               and self.inflight_ops + self.batch_size
+               <= self.max_inflight_ops):
+            bid = (self.node_id << 32) | next(self._next_batch)
+            ops = []
+            for _ in range(self.batch_size):
+                oid = (self.node_id << 40) | next(self._next_op)
+                obj = self.workload.sample_object(self.node_id, self.rng)
+                kind = ("r" if self.rng.random()
+                        < self.workload.reads_fraction else "w")
+                ops.append(Op(oid, self.node_id, obj, kind,
+                              value=oid ^ self.value_seed,
+                              submit_time=self.sim.now))
+            self.ops.extend(ops)
+            self.submitted += 1
+            self.inflight_ops += self.batch_size
+            target = self._pick_target(self.submitted)
+            self._open[bid] = {"ops": ops, "acked_ids": set(), "attempt": 0,
+                               "target": target}
+            self.send(target, "client_req",
+                      {"batch_id": bid, "ops": ops}, size_ops=len(ops))
+            self.set_timer(self.RETRY, "client_retry", {"bid": bid})
+
+    def on_client_reply(self, msg: Msg, now: float) -> None:
+        bid = msg.payload["batch_id"]
+        rec = self._open.get(bid)
+        if rec is None:
+            return                       # duplicate ack after retry
+        if "op_ids" in msg.payload:
+            fresh = set(msg.payload["op_ids"]) - rec["acked_ids"]
+        else:                            # whole-batch ack (EPaxos finish)
+            fresh = {op.op_id for op in rec["ops"]} - rec["acked_ids"]
+        rec["acked_ids"] |= fresh
+        take = len(fresh)
+        self.inflight_ops -= take
+        self.completed_ops += take
+        if len(rec["acked_ids"]) >= self.batch_size:
+            self._open.pop(bid, None)
+        self._maybe_submit()
+
+    def on_timer(self, name: str, payload: dict, now: float) -> None:
+        rec = self._open.get(payload["bid"])
+        if rec is None:
+            return
+        rec["attempt"] += 1
+        # the unresponsive target is suspected for a while: new batches
+        # fail over immediately instead of paying a retry timeout each
+        self._suspect[rec["target"]] = now + self.RETRY * 16
+        target = self._pick_target(self.submitted + rec["attempt"] * 7 + 1)
+        if target == rec["target"]:
+            target = (target + 1) % self.sim.n
+        rec["target"] = target
+        self.send(target, "client_req",
+                  {"batch_id": payload["bid"], "ops": rec["ops"]},
+                  size_ops=len(rec["ops"]))
+        self.set_timer(self.RETRY * min(4, 1 + rec["attempt"]),
+                       "client_retry", payload)
+
+    def done(self) -> bool:
+        return self.completed_ops >= self.total * self.batch_size
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    protocol: str
+    n_replicas: int
+    n_clients: int
+    batch_size: int
+    committed_ops: int
+    makespan_s: float
+    throughput_tx_s: float
+    latency_avg_ms: float
+    latency_p50_ms: float
+    latency_p99_ms: float
+    fast_path_frac: float
+    messages: int
+
+    def row(self) -> str:
+        return (f"{self.protocol},{self.n_replicas},{self.n_clients},"
+                f"{self.batch_size},{self.committed_ops},"
+                f"{self.throughput_tx_s:.0f},{self.latency_avg_ms:.3f},"
+                f"{self.latency_p50_ms:.3f},{self.latency_p99_ms:.3f},"
+                f"{self.fast_path_frac:.3f},{self.messages}")
+
+
+def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
+                    batch_size: int, t_start: float) -> RunResult:
+    ops = [op for c in clients for op in c.ops if op.commit_time >= 0]
+    lat = np.array([op.commit_time - op.submit_time for op in ops]) * 1e3
+    fast = sum(1 for op in ops if op.path == "fast")
+    makespan = max(sim.now - t_start, 1e-9)
+    return RunResult(
+        protocol=protocol, n_replicas=sim.n, n_clients=len(clients),
+        batch_size=batch_size, committed_ops=len(ops), makespan_s=makespan,
+        throughput_tx_s=len(ops) / makespan,
+        latency_avg_ms=float(lat.mean()) if len(lat) else float("nan"),
+        latency_p50_ms=float(np.percentile(lat, 50)) if len(lat) else float("nan"),
+        latency_p99_ms=float(np.percentile(lat, 99)) if len(lat) else float("nan"),
+        fast_path_frac=fast / len(ops) if ops else 0.0,
+        messages=sim.stats_messages)

@@ -1,0 +1,255 @@
+"""Slow path: leader-coordinated node-weighted consensus (paper §4.4, Alg. 2).
+
+  SLOWPATH(op, O):
+    1. non-leaders forward to the leader            (lines 2-3)
+    2. leader takes the mutex, reads priorities     (lines 4-6)
+    3. SLOW_PROPOSE broadcast                       (lines 7-8)
+    4. accumulate priority-weighted SLOW_ACCEPTs    (lines 9-12)
+    5. commit at pSum > T^N, SLOW_COMMIT broadcast,
+       updatePriorities(responders), release mutex  (lines 13-17)
+
+The mutex serializes slow-path instances (one in flight at a time) exactly
+as written in Algorithm 2 — this is what makes the leader the bottleneck
+the paper measures, and it is shared by the Cabinet baseline (Cabinet *is*
+the slow path applied to every operation). Queued forwards are merged into
+one instance up to ``group_cap`` ops (the paper's "dynamic reordering of
+non-conflicting operations within the same batch").
+
+Cross-path ordering: each slow op's SLOW_COMMIT carries the op_ids of fast
+ops that were live at the leader when the instance formed; replicas apply
+per-object in dependency order (BaseReplica.apply_commit). Followers only
+accept proposals from their current leader; RSM apply is op_id-idempotent
+so leader hand-off and retransmission are duplicate-safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core.simulator import Msg, Op
+
+
+@dataclasses.dataclass
+class SlowInstance:
+    inst_id: int
+    ops: List[Op]
+    psum: float
+    acked: set
+    propose_time: float
+    deps: Dict[int, List[int]]
+    committed: bool = False
+
+
+class SlowPathMixin:
+    """Leader queue + Algorithm 2. Requires BaseReplica machinery and the
+    host class to implement ``finalize_op(op, now, path)``."""
+
+    def _init_slowpath(self):
+        self.slow_queue: deque = deque()
+        self.slow_mutex = False                    # Alg. 2 lock(mutex)
+        self.slow_inst: Optional[SlowInstance] = None
+        self._inst_seq = itertools.count()
+        self._forwarded: Dict[int, Op] = {}        # op_id -> op (retransmit)
+        self._slow_pending: set = set()            # op_ids queued or proposed
+
+    # -- leader-side pending bookkeeping (also feeds fast-path conflicts) -----
+
+    def _slow_pending_add(self, op: Op) -> None:
+        if op.op_id not in self._slow_pending:
+            self._slow_pending.add(op.op_id)
+            self._slow_obj_count[op.obj] = \
+                self._slow_obj_count.get(op.obj, 0) + 1
+
+    def _slow_pending_remove(self, op: Op) -> None:
+        if op.op_id in self._slow_pending:
+            self._slow_pending.discard(op.op_id)
+            k = self._slow_obj_count.get(op.obj, 0) - 1
+            if k <= 0:
+                self._slow_obj_count.pop(op.obj, None)
+            else:
+                self._slow_obj_count[op.obj] = k
+
+    # -- any replica: forward to leader (lines 2-3) ----------------------------
+
+    def forward_slow(self, ops: List[Op], now: float) -> None:
+        if not ops:
+            return
+        leader = self.current_leader(now)
+        for op in ops:
+            self._forwarded[op.op_id] = op
+        if leader == self.node_id:
+            self._enqueue_slow(ops, now)
+        else:
+            self.send(leader, "slow_forward", {"ops": ops},
+                      size_ops=len(ops))
+        # retransmission guards against leader failure, not queueing delay:
+        # exponential backoff, generous initial timeout (the leader dedupes
+        # anyway, but duplicate forwards are wasted messages)
+        self.set_timer(self.sim.costs.timeout * 4, "slow_retransmit",
+                       {"op_ids": [op.op_id for op in ops], "backoff": 1})
+
+    def on_slow_forward(self, msg: Msg, now: float) -> None:
+        if not self.is_leader(now):                # stale leader view: bounce
+            self.send(self.current_leader(now), "slow_forward", msg.payload,
+                      size_ops=len(msg.payload["ops"]))
+            return
+        self._enqueue_slow(msg.payload["ops"], now)
+
+    # -- leader: serialized instances (lines 4-17) ------------------------------
+
+    def _enqueue_slow(self, ops: List[Op], now: float) -> None:
+        ops = [op for op in ops if op.op_id not in self.rsm.applied_ops
+               and op.op_id not in self._slow_pending]
+        if ops:
+            for op in ops:
+                self._slow_pending_add(op)
+            self.slow_queue.append(ops)
+        self._slow_kick(now)
+
+    def _slow_kick(self, now: float) -> None:
+        if self.slow_mutex or not self.slow_queue:
+            return
+        if not self.is_leader(now):
+            # lost leadership with work queued: hand everything to the
+            # current leader (clear pending so the forward isn't deduped)
+            leader = self.current_leader(now)
+            while self.slow_queue:
+                ops = self.slow_queue.popleft()
+                for op in ops:
+                    self._slow_pending_remove(op)
+                    self._forwarded[op.op_id] = op
+                self.send(leader, "slow_forward", {"ops": ops},
+                          size_ops=len(ops))
+            return
+        self.slow_mutex = True                      # lock(mutex)
+        # group commit: merge queued forwards into one instance, up to the
+        # configured cap (always take the head group)
+        ops = list(self.slow_queue.popleft())
+        while (self.slow_queue
+               and len(ops) + len(self.slow_queue[0]) <= self.group_cap):
+            ops.extend(self.slow_queue.popleft())
+        c = self.sim.costs
+        self.sim.busy(self.node_id, c.c_coord * len(ops)
+                      * c.speed(self.node_id))
+        # cross-path deps: fast ops live at the leader for these objects
+        # must apply first, everywhere (leader in_flight holds fast entries
+        # only — slow ops are tracked in _slow_pending)
+        deps: Dict[int, List[int]] = {}
+        for op in ops:
+            live = [x for x in self.in_flight.get(op.obj, {})
+                    if x != op.op_id and x not in self._slow_pending
+                    and x not in self.rsm.applied_ops]
+            if live:
+                deps[op.op_id] = live
+        w = self.node_weights()                     # getPriorities()
+        inst = SlowInstance(inst_id=next(self._inst_seq)
+                            | (self.node_id << 48),
+                            ops=ops, psum=float(w[self.node_id]),
+                            acked={self.node_id}, propose_time=now,
+                            deps=deps)
+        self.slow_inst = inst
+        others = [r for r in range(self.sim.n) if r != self.node_id]
+        self.broadcast(others, "slow_propose",
+                       {"inst": inst.inst_id, "ops": ops}, size_ops=len(ops))
+        self.set_timer(self.sim.costs.timeout, "slow_inst_timeout",
+                       {"inst": inst.inst_id})
+        self._slow_check_commit(inst, now)
+
+    def on_slow_accept(self, msg: Msg, now: float) -> None:
+        inst = self.slow_inst
+        if (inst is None or msg.payload["inst"] != inst.inst_id
+                or msg.src in inst.acked):
+            return
+        if not self.is_leader(now):
+            # lost leadership mid-round: abandon rather than commit a
+            # round that would race the new leader's instances
+            self.on_slow_nack(Msg("slow_nack", msg.src, self.node_id,
+                                  {"inst": inst.inst_id}), now)
+            return
+        inst.acked.add(msg.src)
+        inst.psum += float(self.node_weights()[msg.src])
+        # updatePriorities(responders): latency EMA feeds the next ranking
+        self.observe_node(msg.src, now - inst.propose_time)
+        self._slow_check_commit(inst, now)
+
+    def _slow_check_commit(self, inst: SlowInstance, now: float) -> None:
+        if inst.committed or inst.psum <= self.node_threshold():  # strict
+            return
+        inst.committed = True
+        others = [r for r in range(self.sim.n) if r != self.node_id]
+        self.broadcast(others, "slow_commit",
+                       {"ops": inst.ops, "deps": inst.deps},
+                       size_ops=len(inst.ops))
+        self._apply_slow_commit(inst.ops, inst.deps, now)
+        self.slow_inst = None
+        self.slow_mutex = False                     # unlock(mutex)
+        self._slow_kick(now)
+
+    def on_slow_nack(self, msg: Msg, now: float) -> None:
+        inst = self.slow_inst
+        if inst is None or msg.payload["inst"] != inst.inst_id:
+            return
+        # lost leadership: hand the instance to the current leader
+        self.slow_inst = None
+        self.slow_mutex = False
+        for op in inst.ops:
+            self._slow_pending_remove(op)
+        self.forward_slow(inst.ops, now)
+        self._slow_kick(now)
+
+    # -- follower side -----------------------------------------------------------
+
+    def on_slow_propose(self, msg: Msg, now: float) -> None:
+        if msg.src != self.current_leader(now):
+            self.send(msg.src, "slow_nack", {"inst": msg.payload["inst"]})
+            return
+        for op in msg.payload["ops"]:
+            # cross-path guard (Thm 2): fast attempts now see a conflict
+            self.register_inflight(op.obj, op.op_id, now)
+        self.send(msg.src, "slow_accept", {"inst": msg.payload["inst"]})
+
+    def on_slow_commit(self, msg: Msg, now: float) -> None:
+        self._apply_slow_commit(msg.payload["ops"],
+                                msg.payload.get("deps", {}), now)
+
+    def _apply_slow_commit(self, ops: List[Op],
+                           deps: Dict[int, List[int]], now: float) -> None:
+        for op in ops:
+            op.path = op.path or "slow"
+            self.apply_commit(op, now, "slow", deps.get(op.op_id))
+        self.flush_credits()
+
+    # -- timers --------------------------------------------------------------------
+
+    def on_protocol_timer(self, name: str, payload: dict, now: float) -> None:
+        if name == "slow_retransmit":
+            stale = [self._forwarded[i] for i in payload["op_ids"]
+                     if i in self._forwarded]
+            if stale:
+                backoff = min(payload.get("backoff", 1) * 2, 16)
+                leader = self.current_leader(now)
+                if leader != self.node_id:
+                    self.send(leader, "slow_forward", {"ops": stale},
+                              size_ops=len(stale))
+                else:
+                    self._enqueue_slow(stale, now)
+                self.set_timer(self.sim.costs.timeout * 4 * backoff,
+                               "slow_retransmit",
+                               {"op_ids": [op.op_id for op in stale],
+                                "backoff": backoff})
+        elif name == "slow_inst_timeout":
+            inst = self.slow_inst
+            if inst is not None and inst.inst_id == payload["inst"] \
+                    and not inst.committed:
+                missing = [r for r in range(self.sim.n)
+                           if r not in inst.acked]
+                self.broadcast(missing, "slow_propose",
+                               {"inst": inst.inst_id, "ops": inst.ops},
+                               size_ops=len(inst.ops))
+                self.set_timer(self.sim.costs.timeout, "slow_inst_timeout",
+                               {"inst": inst.inst_id})
+        elif name == "fast_timeout":
+            self.on_fast_timeout(payload, now)

@@ -1,0 +1,88 @@
+"""WOC replica: Object Manager + fast path + slow path (paper §4).
+
+A WocReplica is a full consensus-layer node (Fig. 1): it ingests client
+batches as a coordinator, routes each operation through the Object Manager
+(fast path for conflict-free independent objects, slow path otherwise),
+participates in other coordinators' fast rounds, and serves as slow-path
+leader when it is the highest-weighted live replica.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.fastpath import FastPathMixin
+from repro.core.object_manager import ObjectManager, Route
+from repro.core.protocol_base import BaseReplica
+from repro.core.simulator import Msg, Op, Simulation
+from repro.core.slowpath import SlowPathMixin
+
+
+class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
+
+    def __init__(self, node_id: int, sim: Simulation, *, t_fail: int = 1,
+                 steepness: float | None = None, **kw):
+        super().__init__(node_id, sim, t_fail=t_fail, steepness=steepness,
+                         **kw)
+        self.om = ObjectManager()
+        self._init_fastpath()
+        self._init_slowpath()
+        # client batch bookkeeping: batch_id -> {client, remaining op_ids}
+        self.pending: Dict[int, dict] = {}
+        self.op2batch: Dict[int, int] = {}
+
+    # -- ingress (client layer -> consensus layer) ------------------------------
+
+    def on_client_req(self, msg: Msg, now: float) -> None:
+        ops: List[Op] = msg.payload["ops"]
+        bid = msg.payload["batch_id"]
+        rec = {"client": msg.src, "remaining": set()}
+        self.pending[bid] = rec
+        fast_ops, slow_ops = [], []
+        for op in ops:
+            if op.op_id in self.rsm.applied_ops:       # client retry of a
+                if op.commit_time < 0:                 # committed op whose
+                    op.commit_time = now               # coordinator died
+                    op.path = op.path or "slow"        # before stamping it
+                self.credit_op(msg.src, bid, op.op_id)
+                continue
+            rec["remaining"].add(op.op_id)
+            self.op2batch[op.op_id] = bid
+            route = self.om.route(op.obj, op.op_id, op.client,
+                                  self.node_id, now)
+            if route is Route.FAST and self._slow_obj_count.get(op.obj):
+                route = Route.SLOW     # slow op queued here (we are leader)
+            if route is Route.FAST:
+                # coordinator's own in-flight registration (self-vote side)
+                self.register_inflight(op.obj, op.op_id, now)
+                fast_ops.append(op)
+            else:
+                slow_ops.append(op)
+        if not rec["remaining"]:
+            self.pending.pop(bid, None)
+        self.start_fast(fast_ops, now)
+        self.forward_slow(slow_ops, now)
+        self.flush_credits()
+
+    # -- commit bookkeeping -------------------------------------------------------
+
+    def on_applied(self, op: Op, now: float, path: str) -> None:
+        self.om.complete(op.obj, op.op_id, now)
+        self._forwarded.pop(op.op_id, None)
+        self._slow_pending_remove(op)
+        self.finalize_op(op, now, path)
+
+    def finalize_op(self, op: Op, now: float, path: str) -> None:
+        bid = self.op2batch.pop(op.op_id, None)
+        if bid is None:
+            return
+        if op.commit_time < 0:
+            op.commit_time = now
+            op.path = path
+        rec = self.pending.get(bid)
+        if rec is None:
+            return
+        rec["remaining"].discard(op.op_id)
+        self.credit_op(rec["client"], bid, op.op_id)
+        if not rec["remaining"]:
+            self.pending.pop(bid, None)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, host_batch, iterate
+
+__all__ = ["DataConfig", "host_batch", "iterate"]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+The dominant FLOP producer of every attention arch's train/prefill step.
+Grid (B, H, num_q_blocks, num_k_blocks) with the k-block axis 'arbitrary'
+(sequential): accumulators (m, l, acc) live in VMEM scratch and the output
+block is revisited across k steps — the classic TPU flash schedule. Blocks
+are MXU-aligned (q_block x head_dim and k_block x head_dim tiles, 128
+multiples); K/V never materialize beyond one (block_k, head_dim) tile per
+step, so VMEM footprint is O(block_q*hd + 2*block_k*hd + block_q*block_k).
+
+Causal masking skips fully-masked k blocks via the grid order and applies
+the triangular mask only on the diagonal block. GQA: the kv head index is
+h * KV // H (group repetition without materializing repeated K/V).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, scale: float, causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip k blocks entirely above the diagonal
+    run = (not causal) or (ik * block_k <= (iq + 1) * block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale     # (bq, bk)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] \
+            + jax.lax.dot_general(p.astype(v.dtype), v,
+                                  (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    grid = (B, H, S // block_q, S // block_k)
+    scale = hd ** -0.5
+    group = H // KV
+
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, iq, ik: (b, ik, h // group, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, iq, ik: (b, ik, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)

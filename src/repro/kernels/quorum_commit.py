@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: weighted-quorum commit scan (WOC's hot spot).
+
+The paper (§5.4) attributes replica CPU saturation to "message processing
+and quorum computation". At datacenter scale the Object Manager evaluates
+quorum formation for millions of in-flight operations per second; this
+kernel evaluates a BATCH of operations at once:
+
+  per operation: sort replica vote-arrival times (carrying weights),
+  weighted prefix-sum in arrival order, first STRICT crossing of
+  T = sum(w)/2 -> commit time / quorum size / committed flag.
+
+TPU adaptation (vs a CPU/GPU port): the per-op sort is a data-parallel
+bitonic network over the (padded) replica axis — compare-exchange stages
+vectorize across the op rows in VMEM, no scalar loops, lane-aligned tiles
+of 128 ops per grid step. Replica counts are small (<= 128), so one tile
+holds the whole (ops_block x replicas) problem in registers/VMEM.
+
+Non-votes are encoded as +inf arrivals: they sort to the end and carry
+zero weight into the prefix sum, but their weight still counts toward T
+(the threshold is a property of the object, not of who answers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OPS_BLOCK = 128
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _bitonic_by_time(t, w):
+    """Sort rows of t ascending (carrying w) with a bitonic network.
+
+    t, w: (B, N) with N a power of two. Vectorized compare-exchange: every
+    stage is a gather + select over the full tile.
+    """
+    n = t.shape[1]
+    idx = jnp.arange(n)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            t_p = jnp.take(t, partner, axis=1)
+            w_p = jnp.take(w, partner, axis=1)
+            up = (idx & k) == 0                  # ascending region
+            is_lo = (idx & j) == 0               # lower index of the pair
+            keep_min = jnp.where(up, is_lo, ~is_lo)
+            take_partner = jnp.where(keep_min, t > t_p, t < t_p)
+            t = jnp.where(take_partner, t_p, t)
+            w = jnp.where(take_partner, w_p, w)
+            j //= 2
+        k *= 2
+    return t, w
+
+
+def _kernel(t_ref, w_ref, commit_t_ref, qsize_ref, committed_ref, wsum_ref):
+    t = t_ref[...].astype(jnp.float32)           # (BLK, N)
+    w = w_ref[...].astype(jnp.float32)
+    thresh = jnp.sum(w, axis=1, keepdims=True) / 2.0
+    t_s, w_s = _bitonic_by_time(t, w)
+    valid = jnp.isfinite(t_s)
+    csum = jnp.cumsum(jnp.where(valid, w_s, 0.0), axis=1)
+    crossed = (csum > thresh) & valid            # strict crossing (Thm 1)
+    committed = jnp.any(crossed, axis=1)
+    k = jnp.argmax(crossed, axis=1)
+    commit_t = jnp.where(
+        committed,
+        jnp.take_along_axis(t_s, k[:, None], axis=1)[:, 0], jnp.inf)
+    wsum = jnp.where(
+        committed,
+        jnp.take_along_axis(csum, k[:, None], axis=1)[:, 0], 0.0)
+    commit_t_ref[...] = commit_t
+    qsize_ref[...] = jnp.where(committed, k + 1, 0).astype(jnp.int32)
+    committed_ref[...] = committed.astype(jnp.int32)
+    wsum_ref[...] = wsum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quorum_commit_pallas(arrivals, weights, *, interpret: bool = False):
+    """arrivals/weights: (ops, n) -> (commit_time, quorum_size, committed,
+    weight_sum). Pads ops to OPS_BLOCK rows and replicas to a power of two
+    (padding replicas get +inf arrival and zero weight: no effect on T)."""
+    ops, n = arrivals.shape
+    npad = _next_pow2(max(n, 2))
+    opad = ((ops + OPS_BLOCK - 1) // OPS_BLOCK) * OPS_BLOCK
+    t = jnp.full((opad, npad), jnp.inf, jnp.float32)
+    w = jnp.zeros((opad, npad), jnp.float32)
+    t = t.at[:ops, :n].set(arrivals.astype(jnp.float32))
+    w = w.at[:ops, :n].set(weights.astype(jnp.float32))
+
+    grid = (opad // OPS_BLOCK,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((OPS_BLOCK, npad), lambda i: (i, 0)),
+            pl.BlockSpec((OPS_BLOCK, npad), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((OPS_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((OPS_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((OPS_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((OPS_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((opad,), jnp.float32),
+            jax.ShapeDtypeStruct((opad,), jnp.int32),
+            jax.ShapeDtypeStruct((opad,), jnp.int32),
+            jax.ShapeDtypeStruct((opad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t, w)
+    commit_t, qsize, committed, wsum = out
+    return (commit_t[:ops], qsize[:ops], committed[:ops].astype(bool),
+            wsum[:ops])

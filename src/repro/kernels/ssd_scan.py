@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk compute.
+
+The chunked SSD algorithm splits into (a) an intra-chunk quadratic part —
+build the decay-masked (Q x Q) transition matrix and apply it to the chunk
+inputs, plus each chunk's contribution to the recurrent state — and (b) a
+tiny inter-chunk linear recurrence over nc states. (a) carries ~all the
+FLOPs and is this kernel; (b) stays a jnp ``lax.scan`` (nc steps over a
+(nh, hp, N) state — negligible).
+
+Grid (B, nc, nh): one (chunk x head) tile per step. VMEM working set:
+x (Q, hp), B/C (Q, N), seg/dt (Q,), the (Q, Q) mask matrix, and the
+(hp, N) state contribution — all MXU-aligned for Q, hp, N multiples of
+{128, 64}. This mirrors how the reference CUDA kernel tiles over
+(chunk, head) but re-blocked for VMEM instead of shared memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, seg_ref, b_ref, c_ref, y_ref, state_ref,
+            decay_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)     # (Q, hp)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (Q,)
+    seg = seg_ref[0, 0, :, 0].astype(jnp.float32)    # (Q,) cumsum(dt*A)
+    Bm = b_ref[0, 0, :, :].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, 0, :, :].astype(jnp.float32)       # (Q, N)
+    Q = x.shape[0]
+
+    # decay-masked transition: L[i,j] = exp(seg_i - seg_j) * dt_j, i >= j
+    diff = seg[:, None] - seg[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Lmat = jnp.where(ii >= jj, jnp.exp(diff) * dt[None, :], 0.0)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    M = CB * Lmat
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())))      # (Q, hp)
+
+    # chunk state contribution: sum_j exp(seg_Q - seg_j) dt_j B_j x_j^T
+    w = jnp.exp(seg[-1] - seg) * dt                               # (Q,)
+    state = jax.lax.dot_general(x * w[:, None], Bm,
+                                (((0,), (0,)), ((), ())))         # (hp, N)
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    state_ref[0, 0, 0, :, :] = state.astype(state_ref.dtype)
+    decay_ref[0, 0, 0] = jnp.exp(seg[-1]).astype(decay_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, dt, seg, Bm, Cm, *, interpret: bool = False):
+    """x: (B,nc,Q,nh,hp)  dt/seg: (B,nc,Q,nh)  Bm/Cm: (B,nc,Q,N).
+
+    Returns (y_intra (B,nc,Q,nh,hp), state_in (B,nc,nh,hp,N),
+    chunk_decay (B,nc,nh)) — the inputs of the inter-chunk recurrence.
+    """
+    B, nc, Q, nh, hp = x.shape
+    N = Bm.shape[-1]
+    grid = (B, nc, nh)
+    y, state, decay = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hp), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hp), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, hp, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh, hp, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, seg, Bm, Cm)
+    return y, state, decay
+
+
+def ssd_chunked_pallas(x, dt, A, Bm, Cm, D, chunk: int,
+                       initial_state=None, *, interpret: bool = False):
+    """Drop-in for repro.models.mamba2.ssd_chunked, intra-chunk on Pallas."""
+    Bsz, S, nh, hp = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    dtA = dt * A[None, None, :]
+    xc = x.reshape(Bsz, nc, Q, nh, hp)
+    dtc = dt.reshape(Bsz, nc, Q, nh)
+    seg = jnp.cumsum(dtA.reshape(Bsz, nc, Q, nh), axis=2)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    y_intra, state_in, chunk_decay = ssd_intra_chunk(
+        xc, dtc, seg, Bc, Cc, interpret=interpret)
+
+    def scan_body(s, inp):
+        contrib, dec = inp
+        s_out = s
+        s = s * dec[..., None, None] + contrib
+        return s, s_out
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, nh, hp, N), x.dtype))
+    final, states = jax.lax.scan(
+        scan_body, s0.astype(jnp.float32),
+        (state_in.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    states = states.transpose(1, 0, 2, 3, 4)
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cc.astype(jnp.float32), jnp.exp(seg), states)
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, hp)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final.astype(x.dtype)

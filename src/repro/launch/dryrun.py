@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init), which is why this module sets XLA_FLAGS at the very
+top and why the flag lives nowhere global.
+
+Per cell:
+  * build the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  * build abstract params / optimizer state / cache via eval_shape
+    (ShapeDtypeStruct only — a 340B model is never allocated),
+  * jit the right step (train_step / prefill / decode) with explicit
+    in/out shardings and donation,
+  * .lower().compile(), record memory_analysis + cost_analysis + parsed
+    collective bytes into a JSON next to EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, input_specs
+from repro.models import family
+from repro.optim import AdamWConfig, adamw
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import make_rules, resolve_spec
+from repro.launch.train import (abstract_params, abstract_opt_state,
+                                batch_spec_tree, make_train_step,
+                                tree_shardings)
+from repro.launch.serve import (abstract_cache, make_decode_step,
+                                make_prefill_step)
+
+
+def skip_reason(cfg, shape_name):
+    sh = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: 512k decode needs sub-quadratic "
+                "attention (assignment rule; see DESIGN.md)")
+    return None
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = configs.get(arch)
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = make_rules(mesh)
+    fam = family(cfg)
+    sh = SHAPES[shape_name]
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    opt_cfg = AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            ap = abstract_params(cfg)
+            ao = abstract_opt_state(cfg, opt_cfg)
+            pspecs = fam.param_specs(cfg, rules)
+            p_sh = tree_shardings(mesh, ap, pspecs, rules)
+            o_sh = tree_shardings(mesh, ao, adamw.state_specs(pspecs), rules)
+            batch_abs = input_specs(cfg, shape_name)
+            b_sh = tree_shardings(mesh, batch_abs,
+                                  batch_spec_tree(batch_abs), rules)
+            step = make_train_step(cfg, rules, opt_cfg)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh, None),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(ap, ao, batch_abs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        elif kind == "prefill":
+            ap = abstract_params(cfg)
+            pspecs = fam.param_specs(cfg, rules)
+            p_sh = tree_shardings(mesh, ap, pspecs, rules)
+            batch_abs = input_specs(cfg, shape_name)
+            b_sh = tree_shardings(mesh, batch_abs,
+                                  batch_spec_tree(batch_abs), rules)
+            cache_abs = abstract_cache(cfg, B, S)
+            c_sh = tree_shardings(mesh, cache_abs,
+                                  fam.cache_specs(cfg, rules), rules)
+            fn = jax.jit(make_prefill_step(cfg, rules),
+                         in_shardings=(p_sh, b_sh),
+                         out_shardings=(None, c_sh))
+            lowered = fn.lower(ap, batch_abs)
+        else:  # decode
+            ap = abstract_params(cfg)
+            pspecs = fam.param_specs(cfg, rules)
+            p_sh = tree_shardings(mesh, ap, pspecs, rules)
+            cache_abs = abstract_cache(cfg, B, S)
+            c_sh = tree_shardings(mesh, cache_abs,
+                                  fam.cache_specs(cfg, rules), rules)
+            inp = input_specs(cfg, shape_name)
+            tok_sh = tree_shardings(mesh, inp,
+                                    batch_spec_tree(inp), rules)
+            fn = jax.jit(make_decode_step(cfg, rules),
+                         in_shardings=(p_sh, c_sh, tok_sh["token"],
+                                       tok_sh["pos"]),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(ap, cache_abs, inp["token"], inp["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        rf = roofline.analyze(
+            compiled, chips=chips,
+            model_flops=roofline.model_flops_for(cfg, shape_name),
+            hlo_text=hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK", "chips": chips, "kind": kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_estimate_per_device":
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "roofline": rf.to_dict(),
+    }
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir):
+    tag = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{tag}.json"
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    path.write_text(json.dumps(rec, indent=2))
+    status = rec["status"]
+    extra = ""
+    if status == "OK":
+        r = rec["roofline"]
+        extra = (f" bottleneck={r['bottleneck']}"
+                 f" t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                 f"{r['t_collective_s']:.2e})s"
+                 f" mem/dev={rec['memory']['peak_estimate_per_device']/2**30:.2f}GiB"
+                 f" compile={rec['compile_s']:.0f}s")
+    elif status == "FAIL":
+        extra = " " + rec["error"][:160]
+    print(f"[{status}] {tag}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    ok = fail = skip = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch.replace("_", "-"), shape_name, mp,
+                               args.out)
+                ok += rec["status"] == "OK"
+                fail += rec["status"] == "FAIL"
+                skip += rec["status"] == "SKIP"
+    print(f"\ndry-run complete: {ok} OK, {skip} SKIP, {fail} FAIL")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+"""Static analyzer for optimized (post-SPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a while-loop
+body ONCE, so any model whose layers run under ``lax.scan`` (all of ours —
+that is what keeps 96-layer HLO compact) under-reports FLOPs/bytes by the
+trip count (~100-1500x). This module re-derives whole-program costs by
+walking the computation graph with loop multipliers:
+
+  * computations are parsed from the HLO text with a per-computation
+    symbol table (SSA name -> result arrays) so operand shapes resolve;
+  * while ops map to their condition/body computations; the trip count is
+    recovered from the largest integer constant in the loop condition
+    (scan lowers to a ``compare(iter, constant(N))`` condition);
+  * a computation's cost folds into its caller multiplied by the trip
+    count (while) or x1 (fusion/call); conditionals take the most
+    expensive branch;
+  * FLOPs: 2 * prod(result_dims) * prod(lhs contracting dims) per ``dot``
+    (fusion bodies included — dots can be fused on CPU);
+  * bytes: operand + result array bytes of every op at fusion boundaries
+    (fusion internals never touch HBM);
+  * collectives: payload bytes per kind, multiplier-scaled.
+
+Shapes in post-SPMD HLO are PER-DEVICE, so all totals are per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|"
+    r"c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_KIND = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose "bytes" are bookkeeping, not HBM traffic
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "copy-start", "copy-done",
+               "partition-id", "replica-id"}
+
+
+def _arrays(text: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _ARRAY_RE.findall(text)]
+
+
+def _bytes_of(arrays) -> int:
+    return sum(math.prod(dims or [1]) * _DTYPE_BYTES[dt]
+               for dt, dims in arrays)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result: list          # arrays of the result type
+    args: List[str]       # operand SSA names
+    attrs: str            # full remainder for attribute regexes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symtab: Dict[str, list]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.by_kind.items():
+            self.by_kind[k] = self.by_kind.get(k, 0.0) + v * mult
+
+    def tally(self, kind: str, nbytes: float):
+        self.bytes += nbytes
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + nbytes
+
+
+def _split_args(rest: str, kind: str) -> List[str]:
+    """SSA operand names inside the op's top-level parens."""
+    i = rest.find(kind + "(")
+    if i < 0:
+        return []
+    depth = 0
+    args, cur = [], []
+    for ch in rest[i + len(kind):]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args.append("".join(cur).strip())
+                break
+        elif ch == "," and depth == 1:
+            args.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    return [a.lstrip("%") for a in args if a.startswith("%")]
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None and "->" in line and stripped.endswith("{"):
+            h = _COMP_HDR.match(stripped)
+            if h:
+                cur = Computation(h.group(1), [], {})
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # result type = arrays before the op call token
+        km = _OP_KIND.search(rest)
+        kind = km.group(1) if km else "unknown"
+        result = _arrays(rest[:km.start()] if km else rest)
+        args = _split_args(rest, kind) if km else []
+        op = Op(name, kind, result, args, rest)
+        cur.ops.append(op)
+        cur.symtab[name] = result
+    return comps, entry or (next(iter(comps)) if comps else "")
+
+
+def _dot_flops(op: Op, symtab) -> float:
+    result_elems = math.prod((op.result[0][1] or [1])) if op.result else 0
+    contract = 1
+    cm = _CONTRACT.search(op.attrs)
+    lhs = symtab.get(op.args[0], []) if op.args else []
+    lhs_dims = lhs[0][1] if lhs else []
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                contract *= lhs_dims[di]
+    return 2.0 * result_elems * contract
+
+
+def _op_bytes(op: Op, symtab) -> int:
+    total = _bytes_of(op.result)
+    for a in op.args:
+        total += _bytes_of(symtab.get(a, []))
+    return total
+
+
+def _slice_aware_param_bytes(comp: Computation, param_idx: int,
+                             full_bytes: int) -> int:
+    """HBM bytes actually read for one fusion parameter.
+
+    A parameter consumed ONLY by dynamic-slice ops reads just the slices
+    (the scan pattern: stacked layer params sliced per iteration — counting
+    the full stack per trip would inflate traffic by the layer count).
+    A parameter that is the in-place base of a dynamic-update-slice writes
+    just the update (decode KV caches). Anything else reads fully.
+    """
+    pname = None
+    for op in comp.ops:
+        if op.kind == "parameter" and f"parameter({param_idx})" in op.attrs:
+            pname = op.name
+            break
+    if pname is None:
+        return full_bytes
+    counted = 0
+    for op in comp.ops:
+        if pname not in op.args:
+            continue
+        if op.kind == "dynamic-slice" and op.args and op.args[0] == pname:
+            counted += _bytes_of(op.result)
+        elif op.kind == "dynamic-update-slice" and op.args \
+                and op.args[0] == pname:
+            counted += _bytes_of(comp.symtab.get(op.args[1], [])) \
+                if len(op.args) > 1 else 0
+        else:
+            return full_bytes          # some consumer reads it fully
+    return counted if counted else full_bytes
+
+
+def _fusion_bytes(op: Op, symtab, comps) -> int:
+    fm = _ATTR_COMP["calls"].search(op.attrs)
+    inner = comps.get(fm.group(1)) if fm else None
+    total = _bytes_of(op.result)
+    for i, a in enumerate(op.args):
+        full = _bytes_of(symtab.get(a, []))
+        if inner is not None:
+            total += _slice_aware_param_bytes(inner, i, full)
+        else:
+            total += full
+    return total
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        for c in _CONST_INT.findall(op.attrs):
+            best = max(best, int(c))
+    return best
+
+
+_ATTR_COMP = {
+    "body": re.compile(r"body=\s*%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=\s*%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=\s*%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=\s*%?([\w.\-]+)"),
+}
+
+
+def analyze_hlo(hlo: str) -> Costs:
+    comps, entry = parse_computations(hlo)
+    memo: Dict[Tuple[str, bool], Costs] = {}
+
+    def comp_cost(name: str, inside_fusion: bool) -> Costs:
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = Costs()          # cycle guard
+        total = Costs()
+        comp = comps.get(name)
+        if comp is None:
+            return total
+        st = comp.symtab
+        for op in comp.ops:
+            if op.kind == "dot":
+                total.flops += _dot_flops(op, st)
+                if not inside_fusion:
+                    total.tally("dot", _op_bytes(op, st))
+            elif op.kind == "while":
+                bm = _ATTR_COMP["body"].search(op.attrs)
+                cm = _ATTR_COMP["condition"].search(op.attrs)
+                trips = _trip_count(comps[cm.group(1)]) \
+                    if cm and cm.group(1) in comps else 1
+                if bm:
+                    total.add(comp_cost(bm.group(1), False), float(trips))
+            elif op.kind == "fusion":
+                fm = _ATTR_COMP["calls"].search(op.attrs)
+                if fm:
+                    inner = comp_cost(fm.group(1), True)
+                    total.flops += inner.flops
+                    for k, v in inner.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                total.tally("fusion", _fusion_bytes(op, st, comps))
+            elif op.kind in ("call", "custom-call"):
+                fm = (_ATTR_COMP["calls"].search(op.attrs)
+                      or _ATTR_COMP["to_apply"].search(op.attrs))
+                if fm:
+                    total.add(comp_cost(fm.group(1), inside_fusion))
+                if not inside_fusion:
+                    total.tally("call", _op_bytes(op, st))
+            elif op.kind == "conditional":
+                bm = _BRANCHES.search(op.attrs)
+                if bm:
+                    branches = [b.strip().lstrip("%")
+                                for b in bm.group(1).split(",")]
+                    costs = [comp_cost(b, inside_fusion) for b in branches]
+                    if costs:
+                        total.add(max(costs,
+                                      key=lambda c: (c.flops, c.bytes)))
+                if not inside_fusion:
+                    total.tally("conditional", _op_bytes(op, st))
+            elif any(op.kind.startswith(c) for c in _COLLECTIVES):
+                if op.kind.endswith("-done"):
+                    continue
+                base = next(c for c in _COLLECTIVES
+                            if op.kind.startswith(c))
+                payload = max([_bytes_of([a]) for a in op.result]
+                              + [_bytes_of(st.get(x, [])) for x in op.args]
+                              + [0])
+                total.coll[base] = total.coll.get(base, 0.0) + payload
+                if not inside_fusion:
+                    total.tally(base, _op_bytes(op, st))
+            elif op.kind == "dynamic-slice":
+                if not inside_fusion:
+                    total.tally("dynamic-slice", 2 * _bytes_of(op.result))
+            elif op.kind == "dynamic-update-slice":
+                if not inside_fusion and len(op.args) > 1:
+                    total.tally("dynamic-update-slice",
+                                2 * _bytes_of(st.get(op.args[1], [])))
+            else:
+                if not inside_fusion and op.kind not in _SKIP_BYTES:
+                    total.tally(op.kind, _op_bytes(op, st))
+        memo[key] = total
+        return total
+
+    return comp_cost(entry, False)

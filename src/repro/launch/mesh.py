@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 device; only dryrun.py forces
+512 host devices via XLA_FLAGS before any jax import).
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+axis is data-parallel across pods by default (DCN-friendly: only gradient
+reductions cross pods), and is the axis the WOC-style quorum commit layer
+(repro.coord.grad_quorum) masks over.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = None):
+    """Smaller meshes for tests/examples: squeeze onto whatever exists."""
+    tp = model_parallel or (2 if devices % 2 == 0 and devices > 1 else 1)
+    dp = devices // tp
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,158 @@
+"""Three-term roofline from a compiled dry-run artifact (no hardware).
+
+  compute   = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory    = HLO_bytes / (chips * HBM_bw)
+  collective= collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program totals).
+collective_bytes is parsed out of the optimized HLO text: the payload of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (including -start async forms). Payload = the largest
+array in the op's result type — within 2x of the ring-transfer bytes for
+every collective kind, which is what a dominant-term analysis needs; the
+approximation is noted in EXPERIMENTS.md.
+
+TPU v5e constants (per chip): 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|"
+                       r"u64|f64|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+        total = max(total, n * _DTYPE_BYTES[dt])
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind payload bytes summed over the program."""
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip().endswith("-done("):
+            continue   # started ops counted once at -start
+        b = _array_bytes(type_str)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, int]
+    chips: int
+    model_flops: float = 0.0
+
+    # flops/hbm_bytes/coll_bytes are PER-DEVICE (post-SPMD HLO shapes are
+    # the local shards), so each term is already a per-chip time; the
+    # aggregate formulas of the assignment (whole-model totals / (chips *
+    # peak)) coincide because whole-model = per-device * chips.
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is 'useful'
+        (catches remat recompute + padding/dispatch waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU given the dominant term."""
+        t_total = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_total == 0:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / t_total
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "collective_by_kind": self.coll_by_kind,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, *, chips: int, model_flops: float = 0.0,
+            hlo_text: str | None = None) -> Roofline:
+    """Derive roofline terms from the compiled artifact.
+
+    Uses the HLO static analyzer (repro.launch.hlo_analysis) because
+    ``cost_analysis()`` counts while-loop bodies once — layer scans would
+    be under-reported by ~L x microbatches. Post-SPMD shapes are
+    per-device, so the analyzer totals are per-device and the roofline
+    divides model_flops by ``chips`` when comparing (mfu_bound).
+    """
+    from repro.launch.hlo_analysis import analyze_hlo
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    costs = analyze_hlo(txt)
+    return Roofline(
+        flops=float(costs.flops),
+        hbm_bytes=float(costs.bytes),
+        coll_bytes=float(sum(costs.coll.values())),
+        coll_by_kind={k: int(v) for k, v in costs.coll.items()},
+        chips=chips, model_flops=model_flops)
+
+
+def model_flops_for(cfg, shape_name: str) -> float:
+    """6*N*D for training, 2*N*D for prefill, 2*N_active*B per decode step
+    (+ attention KV reads are in the memory term, not flops)."""
+    from repro.configs.base import SHAPES
+    sh = SHAPES[shape_name]
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * (S * B)
+    if kind == "prefill":
+        return 2.0 * n_active * (S * B)
+    return 2.0 * n_active * B        # one decoded token per sequence

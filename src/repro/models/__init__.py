@@ -1,0 +1,23 @@
+"""Model families. Each module exposes the same functional interface:
+
+  init_params(cfg, rng) / param_specs(cfg, rules)
+  loss_fn(cfg, params, batch, rules)
+  init_cache(cfg, B, S) / cache_specs(cfg, rules)
+  prefill(cfg, params, batch, rules, cache_len)
+  decode_step(cfg, params, cache, token, pos, rules)
+"""
+
+from repro.models import (encdec, hybrid, mamba2, moe, transformer, vlm)
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def family(cfg):
+    return FAMILIES[cfg.family]

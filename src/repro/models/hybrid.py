@@ -1,0 +1,229 @@
+"""Zamba2-style hybrid (zamba2-1.2b): a Mamba-2 backbone with ONE shared
+attention+MLP block invoked every ``cfg.shared_attn_every`` layers.
+
+Zamba2's signature trick: the shared block's parameters are reused at every
+invocation (parameter count stays small) and its input is the projection of
+``concat(hidden, original_embedding)`` — the residual stream re-reads the
+prompt embedding. We keep shared *parameters* exact; per-invocation LoRA
+adapters of the released model are simplified away (noted in DESIGN.md).
+
+Decode carries: per-layer mamba (conv, ssd) states + a KV cache per shared
+invocation slot ((n_shared, B, S, KV, hd)); the shared cache is what makes
+``long_500k`` interesting for this arch — attention cost per decoded token
+is O(S) but the mamba backbone is O(1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def n_shared(cfg) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng):
+    dt = cfg.pdtype()
+    r_embed, r_layers, r_shared, r_cat = jax.random.split(rng, 4)
+    rngs = jax.random.split(r_layers, cfg.n_layers)
+    r1, r2 = jax.random.split(r_shared)
+    return {
+        "embed": L.init_embed(r_embed, cfg, dt),
+        "layers": jax.vmap(partial(M.init_layer, cfg=cfg, dt=dt))(rngs),
+        "shared": {"attn": L.init_attention(r1, cfg, dt),
+                   "mlp": L.init_mlp(r2, cfg, dt),
+                   "wcat": L.dense_init(r_cat, (2 * cfg.d_model,
+                                                cfg.d_model), dt),
+                   "ln1": jnp.ones((2 * cfg.d_model,), dt),
+                   "ln2": jnp.ones((cfg.d_model,), dt)},
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def param_specs(cfg, rules):
+    lsp = M.layer_specs(cfg, rules)
+    stacked = jax.tree.map(lambda s: P(None, *s), lsp,
+                           is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": L.specs_embed(cfg, rules),
+        "layers": stacked,
+        "shared": {"attn": L.specs_attention(cfg, rules),
+                   "mlp": L.specs_mlp(cfg, rules),
+                   "wcat": P(rules.fsdp_for(2 * cfg.d_model),
+                             rules.tp_for(cfg.d_model)),
+                   "ln1": P(None), "ln2": P(None)},
+        "ln_f": P(None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared block
+# ---------------------------------------------------------------------------
+
+def shared_block(cfg, sp, x, x0, positions, rules):
+    """concat(h, emb0) -> proj -> attention -> mlp -> residual into x."""
+    h = L.rmsnorm(jnp.concatenate([x, x0], axis=-1), sp["ln1"])
+    h = h @ sp["wcat"]
+    a = L.attention_train(sp["attn"], cfg, h, positions, rules)
+    h2 = L.rmsnorm(a, sp["ln2"])
+    return x + a + L.mlp(sp["mlp"], cfg, h2, rules)
+
+
+def loss_fn(cfg, params, batch, rules=None):
+    x0 = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype())
+    x0 = L.shard(x0, P("DP", None, None), rules)
+    B, S, _ = x0.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    k_every = cfg.shared_attn_every
+
+    def body(carry, inp):
+        x, = carry
+        i, layer = inp
+        x = M.block(cfg, layer, x, rules)
+        x = jax.lax.cond(
+            (i % k_every) == k_every - 1,
+            lambda x: shared_block(cfg, params["shared"], x, x0, positions,
+                                   rules),
+            lambda x: x, x)
+        return (x,), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x,), _ = jax.lax.scan(body, (x0,),
+                           (jnp.arange(cfg.n_layers), params["layers"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x, rules)
+    return L.softmax_xent(logits, batch["targets"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, B, S, dtype=None):
+    dt = dtype or cfg.dtype()
+    mc = M.init_cache(cfg, B, S, dtype)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    mc["shared_k"] = jnp.zeros((n_shared(cfg), B, S, KV, hd), dt)
+    mc["shared_v"] = jnp.zeros((n_shared(cfg), B, S, KV, hd), dt)
+    return mc
+
+
+def cache_specs(cfg, rules=None):
+    sp = M.cache_specs(cfg, rules)
+    sp["shared_k"] = P(None, "DP", "TP", None, None)
+    sp["shared_v"] = P(None, "DP", "TP", None, None)
+    return sp
+
+
+def _shared_prefill(cfg, sp, x, x0, positions, rules, pad):
+    h = L.rmsnorm(jnp.concatenate([x, x0], axis=-1), sp["ln1"])
+    h = h @ sp["wcat"]
+    B, S, _ = h.shape
+    q, k, v = L._qkv(sp["attn"], cfg, h, positions)
+    o = L.attend(q, k, v, causal=True)
+    a = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ sp["attn"]["wo"]
+    h2 = L.rmsnorm(a, sp["ln2"])
+    x = x + a + L.mlp(sp["mlp"], cfg, h2, rules)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x, k, v
+
+
+def prefill(cfg, params, batch, rules=None, cache_len=None):
+    x0 = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype())
+    x0 = L.shard(x0, P("DP", None, None), rules)
+    B, S, _ = x0.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pad = (cache_len or S) - S
+    k_every = cfg.shared_attn_every
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    Sc = cache_len or S
+
+    def body(carry, inp):
+        x, sk, sv = carry
+        i, layer = inp
+        h = L.rmsnorm(x, layer["ln"])
+        y, (conv_st, ssm_st) = M.mixer_forward(layer["mixer"], cfg, h, rules)
+        x = L.shard(x + y, P("DP", None, None), rules)
+
+        def with_shared(args):
+            x, sk, sv = args
+            x, k, v = _shared_prefill(cfg, params["shared"], x, x0,
+                                      positions, rules, pad)
+            j = i // k_every
+            sk = jax.lax.dynamic_update_slice(
+                sk, k[None].astype(sk.dtype), (j, 0, 0, 0, 0))
+            sv = jax.lax.dynamic_update_slice(
+                sv, v[None].astype(sv.dtype), (j, 0, 0, 0, 0))
+            return x, sk, sv
+
+        x, sk, sv = jax.lax.cond((i % k_every) == k_every - 1,
+                                 with_shared, lambda a: a, (x, sk, sv))
+        return (x, sk, sv), (conv_st, ssm_st)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    sk0 = jnp.zeros((n_shared(cfg), B, Sc, KV, hd), cfg.dtype())
+    sv0 = jnp.zeros_like(sk0)
+    (x, sk, sv), (convs, ssms) = jax.lax.scan(
+        body, (x0, sk0, sv0), (jnp.arange(cfg.n_layers), params["layers"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x[:, -1:], rules)
+    return logits, {"conv": convs, "ssm": ssms,
+                    "shared_k": sk, "shared_v": sv}
+
+
+def decode_step(cfg, params, cache, token, pos, rules=None):
+    x = L.embed(params["embed"], token).astype(cfg.dtype())
+    x0 = x
+    k_every = cfg.shared_attn_every
+
+    def body(carry, inp):
+        x, sk, sv = carry
+        i, layer, conv_st, ssm_st = inp
+        h = L.rmsnorm(x, layer["ln"])
+        y, conv_st, ssm_st = M.mixer_decode(layer["mixer"], cfg, h,
+                                            conv_st, ssm_st)
+        x = x + y
+
+        def with_shared(args):
+            x, sk, sv = args
+            j = i // k_every
+            sp = params["shared"]
+            h = L.rmsnorm(jnp.concatenate([x, x0], axis=-1), sp["ln1"])
+            h = h @ sp["wcat"]
+            ck = jax.lax.dynamic_index_in_dim(sk, j, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(sv, j, 0, keepdims=False)
+            a, ck, cv = L.attention_decode(sp["attn"], cfg, h, ck, cv, pos,
+                                           rules)
+            h2 = L.rmsnorm(a, sp["ln2"])
+            x = x + a + L.mlp(sp["mlp"], cfg, h2, rules)
+            sk = jax.lax.dynamic_update_index_in_dim(sk, ck, j, 0)
+            sv = jax.lax.dynamic_update_index_in_dim(sv, cv, j, 0)
+            return x, sk, sv
+
+        x, sk, sv = jax.lax.cond((i % k_every) == k_every - 1,
+                                 with_shared, lambda a: a, (x, sk, sv))
+        return (x, sk, sv), (conv_st, ssm_st)
+
+    (x, sk, sv), (convs, ssms) = jax.lax.scan(
+        body, (x, cache["shared_k"], cache["shared_v"]),
+        (jnp.arange(cfg.n_layers), params["layers"],
+         cache["conv"], cache["ssm"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x, rules)
+    return logits, {"conv": convs, "ssm": ssms,
+                    "shared_k": sk, "shared_v": sv}

@@ -1,0 +1,300 @@
+"""Shared neural-net building blocks (pure JAX, functional).
+
+Conventions:
+  * params are plain dict pytrees; every ``init_*`` has a matching
+    ``specs_*`` returning a same-structure tree of PartitionSpecs (the
+    concrete mesh axes come from :mod:`repro.launch.shardings` rules).
+  * layer stacks carry a leading ``L`` dim and are driven by ``lax.scan``
+    so 96-layer configs lower to compact HLO.
+  * compute dtype is bf16 by default with fp32 softmax/norm accumulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# attention chunk size for memory-bounded (flash-style) prefill
+ATTN_CHUNK = 512
+
+
+def shard(x, spec: P, rules=None):
+    """Sharding constraint, divisibility-sanitized; no-op without rules
+    (single-device smoke tests trace outside any mesh)."""
+    if rules is None:
+        return x
+    from repro.launch.shardings import resolve_spec
+    return jax.lax.with_sharding_constraint(
+        x, resolve_spec(x.shape, spec, rules))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (shape[0] ** -0.5)
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    ang = ang[..., :, None, :]                                 # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def squared_relu(x):
+    r = jnp.maximum(x, 0.0)
+    return r * r
+
+
+ACTS = {"gelu": jax.nn.gelu, "relu2": squared_relu, "silu": jax.nn.silu}
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm), flash-style chunked prefill
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), dtype)
+        p["k_scale"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def specs_attention(cfg, rules):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": P(rules.fsdp_for(d), rules.tp_for(H * hd)),
+        "wk": P(rules.fsdp_for(d), rules.tp_for(KV * hd)),
+        "wv": P(rules.fsdp_for(d), rules.tp_for(KV * hd)),
+        "wo": P(rules.tp_for(H * hd), rules.fsdp_for(d)),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = P(None)
+        p["k_scale"] = P(None)
+    return p
+
+
+def _qkv(params, cfg, x, positions):
+    """Project + reshape + qk-norm + rope. x: (B, S, d)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_scale"])
+        k = rmsnorm(k, params["k_scale"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(q, KV):
+    """(B, S, H, hd) -> (B, S, KV, G, hd): GQA grouping without
+    materializing repeated K/V (a kv=8/H=96 cache repeat would be 12x the
+    memory)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, KV, H // KV, hd)
+
+
+def attend_full(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Plain grouped attention: fine for short S. q: (B,Sq,H,hd),
+    k/v: (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits * scale
+    if causal:
+        Sk = k.shape[1]
+        qpos = jnp.arange(Sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def attend_chunked(q, k, v, *, causal: bool = True):
+    """Flash-style chunked attention over query blocks (bounded memory).
+
+    This is also the jnp oracle for the Pallas flash kernel: scores exist
+    only one (chunk x S) tile at a time via ``lax.map``.
+    """
+    B, S, H, hd = q.shape
+    C = min(ATTN_CHUNK, S)
+    nq = S // C
+    qs = q.reshape(B, nq, C, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_chunk(args):
+        qi, offset = args
+        return attend_full(qi, k, v, causal=causal, q_offset=offset)
+
+    out = jax.lax.map(one_chunk, (qs, jnp.arange(nq) * C))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def attend(q, k, v, *, causal: bool = True):
+    if q.shape[1] > ATTN_CHUNK and q.shape[1] % ATTN_CHUNK == 0:
+        return attend_chunked(q, k, v, causal=causal)
+    return attend_full(q, k, v, causal=causal)
+
+
+def attention_train(params, cfg, x, positions, rules=None):
+    """Causal self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, positions)
+    q = shard(q, P("DP", None, "TP", None), rules)
+    o = attend(q, k, v, causal=True)
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo"]
+
+
+def attention_decode(params, cfg, x, cache_k, cache_v, pos, rules=None):
+    """One-token decode against a (B, S, KV, hd) KV cache.
+
+    The cache is SEQUENCE-sharded over the tp axis (flash-decoding): each
+    chip holds a slice of the context; the softmax over the sharded key
+    axis lowers to two small all-reduces. q/k/v for the new token are tiny.
+
+    pos: (B,) current position per sequence (uniform in batched serving).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, cfg, x, pos[:, None])
+    # insert new kv at pos (same position for the whole batch in serving)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos[0], axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos[0], axis=1)
+    cache_k = shard(cache_k, P("DP", "TP", None, None), rules)
+    cache_v = shard(cache_v, P("DP", "TP", None, None), rules)
+    S = cache_k.shape[1]
+    scale = hd ** -0.5
+    qg = _group(q, KV)                                     # (B,1,KV,G,hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, cache_k).astype(jnp.float32)
+    logits = logits * scale
+    mask = jnp.arange(S)[None, :] <= pos[:, None]          # (B, S)
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, cache_v).reshape(B, 1, H * hd)
+    return (o @ params["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / squared-ReLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "swiglu":
+        return {"wi": dense_init(ks[0], (d, f), dtype),
+                "wg": dense_init(ks[1], (d, f), dtype),
+                "wo": dense_init(ks[2], (f, d), dtype)}
+    return {"wi": dense_init(ks[0], (d, f), dtype),
+            "wo": dense_init(ks[2], (f, d), dtype)}
+
+
+def specs_mlp(cfg, rules):
+    d, f = cfg.d_model, cfg.d_ff
+    wi = P(rules.fsdp_for(d), rules.tp_for(f))
+    wo = P(rules.tp_for(f), rules.fsdp_for(d))
+    if cfg.act == "swiglu":
+        return {"wi": wi, "wg": wi, "wo": wo}
+    return {"wi": wi, "wo": wo}
+
+
+def mlp(params, cfg, x, rules=None):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = ACTS[cfg.act](x @ params["wi"])
+    h = shard(h, P("DP", None, "TP"), rules)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(rng, cfg, dtype):
+    return {"table": dense_init(rng, (cfg.vocab, cfg.d_model), dtype,
+                                scale=0.02)}
+
+
+def specs_embed(cfg, rules):
+    return {"table": P(rules.tp_for(cfg.vocab),
+                       rules.fsdp_for(cfg.d_model))}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, rules=None):
+    logits = jnp.einsum("bsd,vd->bsv", x, params["table"])
+    return shard(logits, P("DP", None, "TP"), rules)
+
+
+def softmax_xent(logits, targets, mask=None):
+    """Token-level CE with fp32 logsumexp; vocab may be sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,240 @@
+"""Token-choice top-k Mixture-of-Experts (qwen3-moe-235b, granite-moe-3b).
+
+Dispatch is sort-free "one-hot position" based with a fixed per-expert
+capacity: every (token, choice) pair computes its position within its
+expert's buffer via a cumulative sum over the flattened assignment one-hot,
+then tokens scatter into an (E, C, d) buffer, expert FFNs run as one
+batched einsum over stacked expert weights, and results gather back
+weighted by router probabilities. Over-capacity tokens drop (standard
+capacity-factor semantics).
+
+Sharding: experts are expert-parallel over the tp axis (E % tp == 0 for
+both assigned MoE configs); the (tokens -> experts) reshard lowers to an
+all-to-all under GSPMD.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_moe_mlp(rng, cfg, dt):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+    p = {"router": L.dense_init(ks[0], (d, E), jnp.float32),
+         "wi": L.dense_init(ks[1], (E, d, f), dt),
+         "wo": L.dense_init(ks[2], (E, f, d), dt, scale=f ** -0.5)}
+    if cfg.act == "swiglu":
+        p["wg"] = L.dense_init(ks[3], (E, d, f), dt)
+    return p
+
+
+def moe_mlp_specs(cfg, rules):
+    d, E = cfg.d_model, cfg.n_experts
+    p = {"router": P(None, None),
+         "wi": P(rules.tp_for(E), rules.fsdp_for(d), None),
+         "wo": P(rules.tp_for(E), None, rules.fsdp_for(d))}
+    if cfg.act == "swiglu":
+        p["wg"] = P(rules.tp_for(E), rules.fsdp_for(d), None)
+    return p
+
+
+def init_layer(rng, cfg, dt):
+    r1, r2 = jax.random.split(rng)
+    return {"attn": L.init_attention(r1, cfg, dt),
+            "moe": init_moe_mlp(r2, cfg, dt),
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt)}
+
+
+def layer_specs(cfg, rules):
+    return {"attn": L.specs_attention(cfg, rules),
+            "moe": moe_mlp_specs(cfg, rules),
+            "ln1": P(None), "ln2": P(None)}
+
+
+def init_params(cfg, rng):
+    dt = cfg.pdtype()
+    r_embed, r_layers = jax.random.split(rng)
+    rngs = jax.random.split(r_layers, cfg.n_layers)
+    return {"embed": L.init_embed(r_embed, cfg, dt),
+            "layers": jax.vmap(partial(init_layer, cfg=cfg, dt=dt))(rngs),
+            "ln_f": jnp.ones((cfg.d_model,), dt)}
+
+
+def param_specs(cfg, rules):
+    lsp = layer_specs(cfg, rules)
+    stacked = jax.tree.map(lambda s: P(None, *s), lsp,
+                           is_leaf=lambda x: isinstance(x, P))
+    return {"embed": L.specs_embed(cfg, rules),
+            "layers": stacked, "ln_f": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# the MoE block
+# ---------------------------------------------------------------------------
+
+def moe_mlp(params, cfg, x, rules=None):
+    """x: (B, S, d) -> (B, S, d).
+
+    GROUP-LOCAL dispatch (§Perf iteration, EXPERIMENTS.md): tokens are
+    grouped by their data-parallel shard (G = dp size) and each group
+    dispatches into its own (E, C_local, d) capacity buffer. The original
+    global formulation left the buffer unsharded whenever E doesn't divide
+    tp (granite's 40 experts on a 16-wide axis) — GSPMD replicated the
+    32 GB buffer and all-reduced it per layer (measured 5.1 TB/dev/step).
+    Group-locality shards the buffer over dp always, over tp on E when
+    divisible (qwen3-moe: 128/16) and over the capacity dim otherwise
+    (granite: C_local % 16 == 0), and keeps the position-cumsum local to
+    the shard instead of a global (T*K, E) prefix scan.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = 1
+    if rules is not None:
+        G = rules._size(rules.dp_axes)
+        if (B * S) % G:
+            G = 1
+    T = B * S
+    Tl = T // G
+    xg = L.shard(x.reshape(G, Tl, d), P("DP", None, None), rules)
+
+    logits = (xg.astype(jnp.float32) @ params["router"])      # (G, Tl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                    # (G, Tl, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # per-(token,choice) position within its expert's LOCAL capacity
+    C = int(max(1, round(cfg.capacity_factor * Tl * K / E)))
+    if rules is not None and rules.tp_for(E) is None:
+        k = rules._size((rules.tp_axis,)) if rules.tp_axis else 1
+        C = ((C + k - 1) // k) * k        # capacity-dim sharding fallback
+    flat_e = top_e.reshape(G, Tl * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (G, T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot            # exclusive
+    pos = jnp.take_along_axis(
+        pos_in_e, flat_e[..., None], axis=2)[..., 0]          # (G, Tl*K)
+    keep = pos < C
+
+    tok_idx = jnp.arange(Tl * K) // K
+
+    def scatter_group(xf, fe, p, kp):
+        buf = jnp.zeros((E, C, d), x.dtype)
+        src = jnp.where(kp[:, None], xf[tok_idx], 0).astype(x.dtype)
+        return buf.at[fe, jnp.where(kp, p, C - 1)].add(src)
+
+    buf = jax.vmap(scatter_group)(xg, flat_e, pos, keep)      # (G, E, C, d)
+    ep = "TP" if (rules is None or rules.tp_for(E)) else None
+    cshard = None if ep else "TP"
+    buf = L.shard(buf, P("DP", ep, cshard, None), rules)
+
+    # batched expert FFN over stacked weights
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["wg"])) \
+            * jnp.einsum("gecd,edf->gecf", buf, params["wi"])
+    else:
+        h = L.ACTS[cfg.act](jnp.einsum("gecd,edf->gecf", buf, params["wi"]))
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo"])       # (G, E, C, d)
+    out = L.shard(out, P("DP", ep, cshard, None), rules)
+
+    def gather_group(og, fe, p, kp, tp):
+        got = og[fe, jnp.where(kp, p, 0)]                     # (Tl*K, d)
+        got = jnp.where(kp[:, None], got, 0)
+        w = tp.reshape(-1)[:, None].astype(x.dtype)
+        return jax.ops.segment_sum(got * w, tok_idx, num_segments=Tl)
+
+    y = jax.vmap(gather_group)(out, flat_e, pos, keep, top_p)
+    return y.reshape(B, S, d)
+
+
+def block(cfg, layer, x, positions, rules):
+    h = L.rmsnorm(x, layer["ln1"])
+    x = x + L.attention_train(layer["attn"], cfg, h, positions, rules)
+    h = L.rmsnorm(x, layer["ln2"])
+    x = x + moe_mlp(layer["moe"], cfg, h, rules)
+    x = L.shard(x, P("DP", None, None), rules)
+    return x
+
+
+def loss_fn(cfg, params, batch, rules=None):
+    x = T.embed_tokens(cfg, params, batch, rules)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, layer):
+        return block(cfg, layer, x, positions, rules), None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x, rules)
+    return L.softmax_xent(logits, batch["targets"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+init_cache = T.init_cache
+cache_specs = T.cache_specs
+
+
+def prefill(cfg, params, batch, rules=None, cache_len=None):
+    x = T.embed_tokens(cfg, params, batch, rules)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pad = (cache_len or S) - S
+
+    def body(x, layer):
+        h = L.rmsnorm(x, layer["ln1"])
+        q, k, v = L._qkv(layer["attn"], cfg, h, positions)
+        o = L.attend(q, k, v, causal=True)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        x = x + o @ layer["attn"]["wo"]
+        h = L.rmsnorm(x, layer["ln2"])
+        x = x + moe_mlp(layer["moe"], cfg, h, rules)
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x = L.shard(x, P("DP", None, None), rules)
+        k = L.shard(k, P("DP", "TP", None, None), rules)
+        v = L.shard(v, P("DP", "TP", None, None), rules)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x[:, -1:], rules)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg, params, cache, token, pos, rules=None):
+    x = L.embed(params["embed"], token).astype(cfg.dtype())
+
+    def body(x, inp):
+        layer, ck, cv = inp
+        h = L.rmsnorm(x, layer["ln1"])
+        a, ck, cv = L.attention_decode(layer["attn"], cfg, h, ck, cv, pos,
+                                       rules)
+        x = x + a
+        h = L.rmsnorm(x, layer["ln2"])
+        x = x + moe_mlp(layer["moe"], cfg, h, rules)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                         cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x, rules)
+    return logits, {"k": ks, "v": vs}

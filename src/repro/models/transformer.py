@@ -1,0 +1,166 @@
+"""Dense decoder-only transformer LM (qwen3-8b/1.7b, nemotron-4-340b,
+phi4-mini) — also the backbone for the VLM and the decoder of the enc-dec.
+
+Layer stacks are stacked-parameter ``lax.scan`` bodies so that 96-layer
+configs lower to compact HLO; ``cfg.remat`` wraps the body in
+``jax.checkpoint`` for training.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_layer(rng, cfg, dt):
+    r1, r2 = jax.random.split(rng)
+    return {"attn": L.init_attention(r1, cfg, dt),
+            "mlp": L.init_mlp(r2, cfg, dt),
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt)}
+
+
+def layer_specs(cfg, rules):
+    return {"attn": L.specs_attention(cfg, rules),
+            "mlp": L.specs_mlp(cfg, rules),
+            "ln1": P(None), "ln2": P(None)}
+
+
+def init_params(cfg, rng):
+    dt = cfg.pdtype()
+    r_embed, r_layers = jax.random.split(rng)
+    rngs = jax.random.split(r_layers, cfg.n_layers)
+    return {
+        "embed": L.init_embed(r_embed, cfg, dt),
+        "layers": jax.vmap(partial(init_layer, cfg=cfg, dt=dt))(rngs),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def param_specs(cfg, rules):
+    lsp = layer_specs(cfg, rules)
+    stacked = jax.tree.map(lambda s: P(None, *s), lsp,
+                           is_leaf=lambda x: isinstance(x, P))
+    return {"embed": L.specs_embed(cfg, rules),
+            "layers": stacked, "ln_f": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def block(cfg, layer, x, positions, rules):
+    h = L.rmsnorm(x, layer["ln1"])
+    x = x + L.attention_train(layer["attn"], cfg, h, positions, rules)
+    h = L.rmsnorm(x, layer["ln2"])
+    x = x + L.mlp(layer["mlp"], cfg, h, rules)
+    x = L.shard(x, P("DP", None, None), rules)
+    return x
+
+
+def trunk(cfg, params, x, positions, rules):
+    def body(x, layer):
+        return block(cfg, layer, x, positions, rules), None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(x, params["ln_f"])
+
+
+def embed_tokens(cfg, params, batch, rules):
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype())
+    if cfg.family == "vlm":
+        # frontend stub: precomputed InternViT patch embeddings prepended
+        x = jnp.concatenate(
+            [batch["image_embeds"].astype(cfg.dtype()), x], axis=1)
+    return L.shard(x, P("DP", None, None), rules)
+
+
+def loss_fn(cfg, params, batch, rules=None):
+    x = embed_tokens(cfg, params, batch, rules)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = trunk(cfg, params, x, positions, rules)
+    if cfg.family == "vlm":          # loss only over the text tail
+        x = x[:, cfg.n_image_tokens:]
+    logits = L.unembed(params["embed"], x, rules)
+    return L.softmax_xent(logits, batch["targets"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with seq-sharded KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, B, S, dtype=None):
+    dt = dtype or cfg.dtype()
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, B, S, kv, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_specs(cfg, rules=None):
+    # flash-decoding layout: cache sequence axis sharded over tp; role
+    # placeholders are resolved (divisibility-checked) by the launcher
+    spec = P(None, "DP", "TP", None, None)
+    return {"k": spec, "v": spec}
+
+
+def prefill(cfg, params, batch, rules=None, cache_len=None):
+    """Run the full context, emit last-position logits + the filled cache."""
+    x = embed_tokens(cfg, params, batch, rules)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pad = (cache_len or S) - S
+
+    def body(x, layer):
+        h = L.rmsnorm(x, layer["ln1"])
+        q, k, v = L._qkv(layer["attn"], cfg, h, positions)
+        o = L.attend(q, k, v, causal=True)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        x = x + o @ layer["attn"]["wo"]
+        h = L.rmsnorm(x, layer["ln2"])
+        x = x + L.mlp(layer["mlp"], cfg, h, rules)
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x = L.shard(x, P("DP", None, None), rules)
+        k = L.shard(k, P("DP", "TP", None, None), rules)
+        v = L.shard(v, P("DP", "TP", None, None), rules)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x[:, -1:], rules)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg, params, cache, token, pos, rules=None):
+    """One token for the whole batch against a (L,B,S,KV,hd) cache."""
+    x = L.embed(params["embed"], token).astype(cfg.dtype())  # (B,1,d)
+
+    def body(x, inp):
+        layer, ck, cv = inp
+        h = L.rmsnorm(x, layer["ln1"])
+        a, ck, cv = L.attention_decode(layer["attn"], cfg, h, ck, cv, pos,
+                                       rules)
+        x = x + a
+        h = L.rmsnorm(x, layer["ln2"])
+        x = x + L.mlp(layer["mlp"], cfg, h, rules)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                         cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.unembed(params["embed"], x, rules)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,13 @@
+"""InternVL2-26b backbone: InternLM2-style dense LM with a ViT frontend
+STUB (the assignment supplies precomputed patch embeddings via
+``input_specs``). Everything else is the dense transformer; the only VLM
+specifics (prepending image embeddings, text-only loss tail) live in
+``transformer.embed_tokens`` / ``loss_fn`` behind ``cfg.family == "vlm"``.
+"""
+
+from repro.models.transformer import (cache_specs, decode_step, init_cache,
+                                      init_params, loss_fn, param_specs,
+                                      prefill)
+
+__all__ = ["init_params", "param_specs", "loss_fn", "init_cache",
+           "cache_specs", "prefill", "decode_step"]

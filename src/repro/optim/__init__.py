@@ -1,0 +1,4 @@
+from repro.optim import adamw, grad_compress, schedule
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adamw", "grad_compress", "schedule", "AdamWConfig"]

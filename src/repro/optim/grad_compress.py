@@ -1,0 +1,56 @@
+"""int8 gradient compression with error feedback (1000-node bandwidth trick).
+
+Quantize each gradient leaf to int8 with a per-leaf scale before the
+data-parallel reduction, keep the quantization residual in an error-feedback
+buffer that is added back next step (so the compression is unbiased over
+time), and dequantize after the reduce. Halving/quartering collective bytes
+moves the roofline collective term directly (EXPERIMENTS.md §Perf).
+
+The pure math lives here (tested against tolerance + convergence
+properties); the collective wiring is in repro.coord.grad_quorum which
+reduces the int8 payload inside a shard_map psum.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g, err):
+    """g: float grad leaf; err: error feedback. Returns (q, scale, new_err).
+
+    q is int8; g ~= q * scale + new_err.
+    """
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_err = g - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_tree):
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_tree)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress(g, e)
+        qs.append(q); scales.append(s); errs.append(ne)
+    return (tdef.unflatten(qs), tdef.unflatten(scales),
+            tdef.unflatten(errs))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(decompress, qs, scales)
+
+
+def compressed_bytes(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))   # 1 byte / element

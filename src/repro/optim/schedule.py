@@ -1,0 +1,22 @@
+"""LR schedules (pure functions of the step counter)."""
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, warmup: int = 200, total: int = 10_000,
+                       min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.float32(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+def linear_decay(step, *, warmup: int = 200, total: int = 10_000,
+                 min_ratio: float = 0.0):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.float32(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return warm * (1.0 - (1.0 - min_ratio) * frac)

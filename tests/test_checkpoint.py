@@ -1,0 +1,88 @@
+"""Checkpoint manager: roundtrip, torn-write safety, async writer."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, restore_latest, save
+from repro.optim import AdamWConfig, adamw
+
+
+def _tree():
+    rng = jax.random.PRNGKey(0)
+    params = {"layers": {"w": jax.random.normal(rng, (4, 8)),
+                         "b": jnp.zeros(8)},
+              "embed": jax.random.normal(rng, (16, 4))}
+    opt = adamw.init(params, AdamWConfig())
+    return params, opt
+
+
+def test_save_restore_roundtrip(tmp_path):
+    params, opt = _tree()
+    save(tmp_path, 7, params, opt)
+    p2, o2, step = restore_latest(tmp_path, jax.tree.map(jnp.zeros_like,
+                                                         params),
+                                  jax.tree.map(jnp.zeros_like, opt))
+    assert step == 7
+    np.testing.assert_allclose(np.asarray(p2["layers"]["w"]),
+                               np.asarray(params["layers"]["w"]))
+    np.testing.assert_array_equal(np.asarray(o2["count"]),
+                                  np.asarray(opt["count"]))
+
+
+def test_latest_wins(tmp_path):
+    params, opt = _tree()
+    save(tmp_path, 5, params, opt)
+    bumped = jax.tree.map(lambda x: x + 1, params)
+    save(tmp_path, 9, bumped, opt)
+    p2, _, step = restore_latest(tmp_path, params, opt)
+    assert step == 9
+    np.testing.assert_allclose(np.asarray(p2["embed"]),
+                               np.asarray(params["embed"]) + 1)
+
+
+def test_torn_write_is_ignored(tmp_path):
+    """A shard dir without a committed manifest must never be restored."""
+    params, opt = _tree()
+    save(tmp_path, 5, params, opt)
+    # step 6: shard written but no manifest (crash before phase 2)
+    from repro.checkpoint.manager import save_shard
+    save_shard(tmp_path, 6, 0, params, opt)
+    _, _, step = restore_latest(tmp_path, params, opt)
+    assert step == 5
+    # and a manifest whose certificate does not verify is ignored too
+    bad = {"step": 8, "hosts": [4], "weight": 1.0, "threshold": 5.0,
+           "committed": True, "files": []}
+    (pathlib.Path(tmp_path) / "manifest_00000008.json").write_text(
+        json.dumps(bad))
+    _, _, step = restore_latest(tmp_path, params, opt)
+    assert step == 5
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    params, opt = _tree()
+    save(tmp_path, 1, params, opt)
+    wrong = {"layers": {"w": jnp.zeros((2, 2)), "b": jnp.zeros(8)},
+             "embed": jnp.zeros((16, 4))}
+    with pytest.raises(ValueError):
+        restore_latest(tmp_path, wrong, opt)
+
+
+def test_async_checkpointer(tmp_path):
+    params, opt = _tree()
+    w = AsyncCheckpointer(tmp_path)
+    for s in (1, 2, 3):
+        w.save(s, params, opt)
+    w.wait()
+    _, _, step = restore_latest(tmp_path, params, opt)
+    assert step == 3
+
+
+def test_missing_dir_raises(tmp_path):
+    params, opt = _tree()
+    with pytest.raises(FileNotFoundError):
+        restore_latest(tmp_path / "nope", params, opt)

@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a REDUCED same-family config and runs one forward/train step
+on CPU, asserting output shapes and finiteness. Full configs are exercised
+only via the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import family
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    batch = {"tokens": jax.random.randint(rng, (B, S), 2, cfg.vocab),
+             "targets": jax.random.randint(rng, (B, S), 2, cfg.vocab),
+             "mask": jnp.ones((B, S), cfg.dtype())}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (B, S // cfg.enc_len_ratio, cfg.d_model), dtype=cfg.dtype())
+    if cfg.family == "vlm":
+        n = cfg.n_image_tokens
+        batch["image_embeds"] = jax.random.normal(
+            rng, (B, n, cfg.d_model), dtype=cfg.dtype())
+        batch = {**batch, "tokens": batch["tokens"][:, :S - n],
+                 "targets": batch["targets"][:, :S - n],
+                 "mask": batch["mask"][:, :S - n]}
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = configs.smoke(arch)
+    fam = family(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = fam.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    loss, grads = jax.value_and_grad(
+        lambda p: fam.loss_fn(cfg, p, batch))(params)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat), f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = configs.smoke(arch)
+    fam = family(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = fam.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    pre = {k: v for k, v in batch.items() if k not in ("targets", "mask")}
+    Sq = pre["tokens"].shape[1]
+    logits, cache = fam.prefill(cfg, params, pre, cache_len=S + 8)
+    assert logits.shape[:2] == (B, 1)
+    assert logits.shape[-1] == cfg.vocab
+    pos0 = Sq + (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache = fam.decode_step(cfg, params, cache, tok,
+                                     jnp.full((B,), pos0, jnp.int32))
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))), arch
+
+
+def test_registry_roundtrip():
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        assert cfg.param_count() > 0
+        assert cfg.name.replace("-", "_").replace(".", "p") == arch
+    # canonical dashed ids resolve too
+    assert configs.get("qwen3-1.7b").name == "qwen3-1.7b"
+    assert configs.get("nemotron-4-340b").n_layers == 96
+
+
+def test_published_sizes_roughly_match():
+    """Parameter math should land near the published model sizes."""
+    expect = {"qwen3_8b": 8e9, "qwen3_1p7b": 1.7e9,
+              "nemotron_4_340b": 340e9, "phi4_mini_3p8b": 3.8e9,
+              "mamba2_780m": 0.78e9}
+    for arch, n in expect.items():
+        got = configs.get(arch).param_count()
+        assert 0.7 * n <= got <= 1.25 * n, (arch, got, n)
+    moe = configs.get("qwen3_moe_235b_a22b")
+    assert 0.85 * 235e9 <= moe.param_count() <= 1.1 * 235e9
+    assert moe.active_param_count() < 0.15 * moe.param_count()

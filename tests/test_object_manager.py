@@ -1,0 +1,71 @@
+"""Object Manager: classification, routing, in-flight tracking (paper §3.3)."""
+
+from repro.core.object_manager import ObjectClass, ObjectManager, Route
+
+
+def test_single_client_object_is_independent_fast():
+    om = ObjectManager()
+    for k in range(5):
+        r = om.route(obj=1, op_id=k, client=7, coordinator=0, now=float(k))
+        om.complete(1, k, float(k) + 0.5)
+        assert r is Route.FAST
+    assert om.classify(1) is ObjectClass.INDEPENDENT
+
+
+def test_multi_client_object_becomes_common_and_slow():
+    om = ObjectManager()
+    om.route(1, 0, client=7, coordinator=0, now=0.0)
+    om.complete(1, 0, 0.5)
+    r = om.route(1, 1, client=8, coordinator=0, now=1.0)
+    assert om.classify(1) in (ObjectClass.COMMON, ObjectClass.HOT)
+    assert r is Route.SLOW
+
+
+def test_concurrent_access_becomes_hot():
+    om = ObjectManager()
+    for k in range(4):   # 4 simultaneous in-flight ops from 4 clients
+        om.route(1, k, client=k, coordinator=0, now=0.0)
+    assert om.classify(1) is ObjectClass.HOT
+
+
+def test_inflight_conflict_routes_slow_even_if_independent():
+    om = ObjectManager()
+    assert om.route(1, 0, client=7, coordinator=0, now=0.0) is Route.FAST
+    # same client, same object, first op still in flight
+    assert om.route(1, 1, client=7, coordinator=0, now=0.1) is Route.SLOW
+
+
+def test_demotion_after_clean_streak():
+    om = ObjectManager(demote_after_ops=4)
+    om.route(1, 0, client=7, coordinator=0, now=0.0)
+    om.complete(1, 0, 0.1)
+    om.route(1, 1, client=8, coordinator=0, now=1.0)    # -> COMMON
+    om.complete(1, 1, 1.1)
+    assert om.classify(1) is ObjectClass.COMMON
+    for k in range(2, 8):   # conflict-free accesses by a single client
+        om.route(1, k, client=8, coordinator=0, now=float(k))
+        om.complete(1, k, float(k) + 0.1)
+    # after the clean streak the object is COMMON (multi-client) but no
+    # longer escalates; a long exclusive streak from one client keeps it
+    # fast-path-eligible only when reclassified INDEPENDENT
+    assert om.classify(1) in (ObjectClass.COMMON, ObjectClass.INDEPENDENT)
+
+
+def test_complete_clears_inflight():
+    om = ObjectManager()
+    om.route(1, 0, client=7, coordinator=0, now=0.0)
+    assert om.has_conflict(1)
+    om.complete(1, 0, 0.5)
+    assert not om.has_conflict(1)
+    assert om.inflight_count() == 0
+
+
+def test_stats_tracking():
+    om = ObjectManager()
+    om.route(1, 0, client=7, coordinator=0, now=0.0)
+    om.route(1, 1, client=8, coordinator=0, now=0.1)    # conflict
+    st = om.stats[1]
+    assert st.ops == 2
+    assert st.conflicts == 1
+    assert st.conflict_rate() == 0.5
+    assert st.distinct_clients == {7, 8}

@@ -1,0 +1,104 @@
+"""Optimizer + compression + schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw, grad_compress, schedule
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_weight_decay_shrinks():
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.5)
+    params = {"w": jnp.ones(4) * 10.0}
+    state = adamw.init(params, cfg)
+    zero_g = {"w": jnp.zeros(4)}
+    for _ in range(50):
+        params, state, _ = adamw.update(zero_g, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 10.0
+
+
+def test_adamw_grad_clip_metric():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    big = {"w": jnp.ones(3) * 1e3}
+    _, _, m = adamw.update(big, state, params, cfg)
+    assert float(m["grad_norm"]) > 1e3
+
+
+def test_adamw_bf16_moments_roundtrip():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones(8, jnp.bfloat16)}
+    state = adamw.init(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(8, jnp.bfloat16)}
+    p2, s2, _ = adamw.update(g, state, params, cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["v"]["w"].dtype == jnp.bfloat16
+
+
+@given(seed=st.integers(0, 2**31), scale=st.floats(1e-3, 1e3))
+@settings(max_examples=30, deadline=None)
+def test_compress_error_feedback_bounds_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=64).astype(np.float32) * scale)
+    err = jnp.zeros(64)
+    q, s, err = grad_compress.compress(g, err)
+    assert q.dtype == jnp.int8
+    # reconstruction + residual is exact
+    np.testing.assert_allclose(
+        np.asarray(grad_compress.decompress(q, s) + err), np.asarray(g),
+        rtol=1e-5, atol=1e-5 * scale)
+    # residual bounded by half a quantization step
+    assert float(jnp.abs(err).max()) <= float(s) * 0.51
+
+
+def test_compress_error_feedback_unbiased_over_time():
+    """Accumulated decompressed updates track the true gradient sum."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros(32)
+    true_sum = np.zeros(32)
+    got_sum = np.zeros(32)
+    for i in range(200):
+        g = jnp.asarray(rng.normal(size=32).astype(np.float32))
+        q, s, err = grad_compress.compress(g, err)
+        true_sum += np.asarray(g)
+        got_sum += np.asarray(grad_compress.decompress(q, s))
+    # the residual carried forward is the only divergence
+    np.testing.assert_allclose(got_sum + np.asarray(err), true_sum,
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_compress_tree_and_bytes():
+    grads = {"a": jnp.ones((4, 4)), "b": jnp.zeros(10)}
+    err = grad_compress.init_error(grads)
+    qs, scales, err = grad_compress.compress_tree(grads, err)
+    out = grad_compress.decompress_tree(qs, scales)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0, rtol=1e-2)
+    assert grad_compress.compressed_bytes(qs) == 26   # 1 byte per element
+
+
+def test_schedules_shape():
+    s0 = float(schedule.cosine_with_warmup(jnp.int32(0), warmup=10,
+                                           total=100))
+    s10 = float(schedule.cosine_with_warmup(jnp.int32(10), warmup=10,
+                                            total=100))
+    s100 = float(schedule.cosine_with_warmup(jnp.int32(100), warmup=10,
+                                             total=100, min_ratio=0.1))
+    assert s0 == 0.0 and abs(s10 - 1.0) < 1e-6
+    assert abs(s100 - 0.1) < 1e-6
+    l100 = float(schedule.linear_decay(jnp.int32(100), warmup=10, total=100))
+    assert l100 < 1e-6

@@ -1,0 +1,83 @@
+"""Vectorized quorum math vs brute-force oracle + Theorem 1 properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import weights as W
+from repro.core.quorum import quorum_commit, quorums_intersect
+
+
+def brute_force_commit(arrivals, weights, threshold):
+    """O(n^2) reference: walk votes in time order, accumulate weight."""
+    order = np.argsort(arrivals)
+    acc = 0.0
+    for k, i in enumerate(order):
+        if not np.isfinite(arrivals[i]):
+            break
+        acc += weights[i]
+        if acc > threshold:                  # strict crossing (Thm 1)
+            return True, arrivals[i], k + 1, acc
+    return False, np.inf, 0, 0.0
+
+
+@given(st.data())
+@settings(max_examples=100, deadline=None)
+def test_quorum_commit_matches_brute_force(data):
+    n = data.draw(st.integers(2, 12))
+    ops = data.draw(st.integers(1, 6))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    arrivals = rng.uniform(0, 10, size=(ops, n))
+    # knock out a random subset of votes
+    mask = rng.random((ops, n)) < 0.3
+    arrivals = np.where(mask, np.inf, arrivals)
+    weights = rng.uniform(0.1, 8.0, size=(ops, n))
+
+    res = quorum_commit(jnp.asarray(arrivals), jnp.asarray(weights))
+    thresh = weights.sum(-1) / 2.0
+    for i in range(ops):
+        ok, t, k, acc = brute_force_commit(arrivals[i], weights[i], thresh[i])
+        assert bool(res.committed[i]) == ok
+        if ok:
+            assert abs(float(res.commit_time[i]) - t) < 1e-5
+            assert int(res.quorum_size[i]) == k
+            assert abs(float(res.weight_sum[i]) - acc) < 1e-4
+            # member mask: exactly the k earliest arrivals
+            members = np.asarray(res.members[i])
+            assert members.sum() == k
+            assert weights[i][members].sum() >= thresh[i] - 1e-5
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_theorem1_fast_path_quorums_intersect(seed):
+    """Any two committing quorums over the same weight vector intersect."""
+    rng = np.random.default_rng(seed)
+    n = rng.integers(3, 12)
+    r = rng.uniform(1.0, 2.0)
+    w = np.asarray(W.geometric_weights(int(n), float(r)))
+    # two independent operations with independent vote arrival orders
+    a1 = rng.permutation(np.arange(1.0, n + 1))
+    a2 = rng.permutation(np.arange(1.0, n + 1))
+    res = quorum_commit(jnp.asarray(np.stack([a1, a2])),
+                        jnp.asarray(np.stack([w, w])))
+    assert bool(res.committed[0]) and bool(res.committed[1])
+    assert bool(quorums_intersect(res.members[0], res.members[1]))
+
+
+def test_no_commit_when_too_many_failures():
+    w = jnp.asarray(W.geometric_weights(5, 1.4))
+    # only the two lightest replicas vote: weight 1.4+1.0 < T=5.37
+    arrivals = jnp.array([jnp.inf, jnp.inf, jnp.inf, 1.0, 2.0])
+    res = quorum_commit(arrivals, w)
+    assert not bool(res.committed[0])
+    assert not np.isfinite(float(res.commit_time[0]))
+
+
+def test_commit_with_top_heavy_quorum():
+    w = jnp.asarray(W.geometric_weights(5, 1.9))   # steep: top-2 suffice
+    arrivals = jnp.array([0.5, 1.0, jnp.inf, jnp.inf, jnp.inf])
+    res = quorum_commit(arrivals, w)
+    assert bool(res.committed[0])
+    assert int(res.quorum_size[0]) == 2
+    assert float(res.commit_time[0]) == 1.0

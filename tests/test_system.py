@@ -1,0 +1,135 @@
+"""End-to-end protocol behaviour: §5 performance claims, §4.5 safety,
+liveness under crash/recovery — on the deterministic cluster simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core.rsm import (check_linearizability, check_state_machine_safety,
+                            history_from_ops)
+from repro.core.runner import RunConfig, run
+from repro.core.simulator import Workload
+
+
+def _all_committed(art):
+    return all(op.commit_time >= 0 for c in art.clients for op in c.ops)
+
+
+def _check_safety(art):
+    rsms = [r.rsm for r in art.replicas
+            if r.node_id not in art.sim.crashed]
+    ok, why = check_state_machine_safety(rsms)
+    assert ok, why
+    # linearizability against the most advanced replica's apply order
+    best = max(rsms, key=lambda r: r.apply_count)
+    ops = [op for c in art.clients for op in c.ops]
+    ok, why = check_linearizability(history_from_ops(ops), best.applied)
+    assert ok, why
+
+
+@pytest.mark.parametrize("proto", ["woc", "cabinet", "paxos", "epaxos"])
+def test_all_ops_commit(proto):
+    art = run(RunConfig(protocol=proto, total_ops=2000, batch_size=10))
+    assert art.result.committed_ops == 2000
+    assert _all_committed(art)
+
+
+@pytest.mark.parametrize("proto", ["woc", "cabinet", "paxos"])
+def test_state_machine_safety_and_linearizability(proto):
+    # high contention stresses the conflict machinery
+    w = Workload(p_independent=0.5, p_common=0.2, p_hot=0.3,
+                 n_hot_objects=3, n_common_objects=8)
+    art = run(RunConfig(protocol=proto, total_ops=3000, batch_size=5,
+                        workload=w, n_clients=4))
+    assert art.result.committed_ops == 3000
+    _check_safety(art)
+
+
+def test_woc_fast_path_dominates_default_workload():
+    art = run(RunConfig(protocol="woc", total_ops=5000, batch_size=10))
+    assert art.result.fast_path_frac > 0.85     # 90/5/5 default mix
+
+
+def test_woc_beats_cabinet_low_conflict():
+    """Abstract claim: >=~4x at >70% independent; we assert >=2.5x."""
+    w = Workload(p_independent=1.0, p_common=0.0, p_hot=0.0)
+    woc = run(RunConfig(protocol="woc", total_ops=6000, batch_size=10,
+                        workload=w)).result
+    cab = run(RunConfig(protocol="cabinet", total_ops=6000, batch_size=10,
+                        workload=w)).result
+    assert woc.throughput_tx_s > 2.5 * cab.throughput_tx_s
+
+
+def test_crossover_under_full_contention():
+    """§5.3: at 100% conflict Cabinet >= WOC (equivalent or better)."""
+    w = Workload(p_independent=0.0, p_common=0.0, p_hot=1.0)
+    woc = run(RunConfig(protocol="woc", total_ops=5000, batch_size=10,
+                        workload=w)).result
+    cab = run(RunConfig(protocol="cabinet", total_ops=5000, batch_size=10,
+                        workload=w)).result
+    assert woc.throughput_tx_s <= 1.15 * cab.throughput_tx_s
+    assert woc.fast_path_frac < 0.1
+
+
+def test_weighted_beats_uniform_quorums():
+    """The Cabinet-vs-Paxos delta: node weighting helps the slow path."""
+    cab = run(RunConfig(protocol="cabinet", total_ops=5000,
+                        batch_size=10)).result
+    pax = run(RunConfig(protocol="paxos", total_ops=5000,
+                        batch_size=10)).result
+    assert cab.throughput_tx_s >= pax.throughput_tx_s
+    assert cab.latency_p50_ms <= pax.latency_p50_ms
+
+
+@pytest.mark.parametrize("proto", ["woc", "cabinet"])
+def test_liveness_after_leader_crash(proto):
+    """Crash the initial leader mid-run: all ops still commit, safety holds."""
+    art = run(RunConfig(protocol=proto, total_ops=3000, batch_size=10,
+                        crash_at=0.05))
+    assert art.result.committed_ops == 3000
+    _check_safety(art)
+
+
+def test_liveness_crash_then_recover():
+    art = run(RunConfig(protocol="woc", total_ops=4000, batch_size=10,
+                        crash_at=0.05, recover_at=0.4))
+    assert art.result.committed_ops == 4000
+    # recovered node must not have diverged (prefix rule covers lag)
+    _check_safety(art)
+
+
+def test_crash_recover_hot_contention_n7():
+    """Regression: the recovered leader must install the peer's PENDING
+    dep-ordered commit queue, not just its applied state — and must not
+    reclaim leadership while the interim leader has an instance in flight.
+    Exact scenario that exposed both bugs (examples/woc_kv_store.py)."""
+    w = Workload(p_independent=0.8, p_common=0.1, p_hot=0.1,
+                 n_hot_objects=4, reads_fraction=0.25)
+    art = run(RunConfig(protocol="woc", n_replicas=7, n_clients=4,
+                        batch_size=20, total_ops=12_000, t_fail=2,
+                        workload=w, crash_at=0.10, recover_at=0.40))
+    assert art.result.committed_ops == 12_000
+    _check_safety(art)
+
+
+def test_deterministic_given_seed():
+    a = run(RunConfig(protocol="woc", total_ops=2000, batch_size=10, seed=3))
+    b = run(RunConfig(protocol="woc", total_ops=2000, batch_size=10, seed=3))
+    assert a.result.throughput_tx_s == b.result.throughput_tx_s
+    assert a.result.latency_p50_ms == b.result.latency_p50_ms
+
+
+def test_batching_amortizes():
+    small = run(RunConfig(protocol="woc", total_ops=4000,
+                          batch_size=10)).result
+    big = run(RunConfig(protocol="woc", total_ops=40000,
+                        batch_size=400)).result
+    assert big.throughput_tx_s > 2 * small.throughput_tx_s
+
+
+def test_reads_and_writes_linearize():
+    w = Workload(p_independent=0.6, p_common=0.2, p_hot=0.2,
+                 n_hot_objects=2, reads_fraction=0.3)
+    art = run(RunConfig(protocol="woc", total_ops=2000, batch_size=5,
+                        workload=w, n_clients=3))
+    assert art.result.committed_ops == 2000
+    _check_safety(art)

@@ -1,0 +1,102 @@
+"""Geometric weight assignment + invariants (paper §3.1-3.2, Tables 1-2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import weights as W
+
+
+def test_geometric_weights_table1_obja():
+    # ObjA row of Table 1: n=7, R=1.40
+    w = np.asarray(W.geometric_weights(7, 1.40))
+    expected = [7.53, 5.38, 3.84, 2.74, 1.96, 1.40, 1.00]
+    np.testing.assert_allclose(w, expected, atol=0.005)
+    t = float(W.consensus_threshold(w))
+    assert abs(t - 11.93) < 0.01          # T^O column of Table 1
+
+
+def test_geometric_weights_table2_rows():
+    # Table 2 rows: (t, R) -> leading weights
+    rows = {1: (1.40, [7.5, 5.4, 3.8, 2.7, 2.0, 1.4, 1.0]),
+            2: (1.38, [6.9, 5.0, 3.6, 2.6, 1.9, 1.4, 1.0]),
+            3: (1.19, [2.8, 2.4, 2.0, 1.7, 1.4, 1.2, 1.0]),
+            4: (1.08, [1.6, 1.5, 1.4, 1.3, 1.2, 1.1, 1.0])}
+    for t, (r, exp) in rows.items():
+        w = np.asarray(W.geometric_weights(7, r))
+        np.testing.assert_allclose(w, exp, atol=0.06)
+
+
+def test_paper_tables_regenerate():
+    rs, w, thresh = W.paper_table1()
+    assert w.shape == (4, 7)
+    assert np.all(np.diff(w, axis=-1) <= 0)          # descending
+    np.testing.assert_allclose(w[:, -1], 1.0)        # slowest always 1.0
+    np.testing.assert_allclose(thresh, w.sum(-1) / 2)
+
+
+@given(n=st.integers(3, 15), r=st.floats(1.0, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_invariant_progress_always_holds_for_max_safe_t(n, r):
+    """I1: top t+1 weights exceed T, for t = the max safe t of the vector."""
+    w = W.geometric_weights(n, r)
+    t = int(W.max_safe_t(w))
+    assert bool(W.check_invariant_progress(w, t))
+    if t >= 1:
+        assert bool(W.check_invariant_safety(w, t))
+
+
+@given(n=st.integers(3, 15))
+@settings(max_examples=30, deadline=None)
+def test_solve_steepness_satisfies_both_invariants(n):
+    for t in range(1, (n - 1) // 2 + 1):
+        r = W.solve_steepness(n, t)
+        w = W.geometric_weights(n, r)
+        assert bool(W.check_invariant_safety(w, t)), (n, t, r)
+        assert bool(W.check_invariant_progress(w, t)), (n, t, r)
+        # quorum is exactly the top t+1 (cabinet) at the solved steepness
+        assert int(W.cabinet_size(w)) == t + 1
+
+
+def test_solve_steepness_matches_paper_scale():
+    # paper Table 2: n=7 t=1 -> 1.40 feasible; t=4 -> ~1.08
+    assert W.solve_steepness(7, 1) >= 1.40
+    assert 1.0 < W.solve_steepness(7, 3) < 1.30
+
+
+def test_steepness_tradeoff_quorum_size():
+    """Low R -> larger quorums (more fault tolerant); high R -> smaller."""
+    flat = int(W.cabinet_size(W.geometric_weights(7, 1.05)))
+    steep = int(W.cabinet_size(W.geometric_weights(7, 1.9)))
+    assert steep < flat
+    assert steep == 2 and flat >= 4
+
+
+def test_weight_tracker_dynamic_assignment():
+    tr = W.WeightTracker.init(num_objects=3, n=5)
+    import jax.numpy as jnp
+    # object 0: replica 3 consistently fastest
+    lat = jnp.array([[20.0, 15.0, 12.0, 1.0, 18.0]])
+    for _ in range(10):
+        tr = tr.observe(jnp.array([0]), lat)
+    w = tr.weights(1.4)
+    assert int(jnp.argmax(w[0])) == 3          # fastest gets highest weight
+    # object 1 untouched: uniform prior -> weights follow initial rank
+    assert w.shape == (3, 5)
+
+
+def test_node_weights_from_latency():
+    import jax.numpy as jnp
+    lat = jnp.array([5.0, 1.0, 9.0, 3.0])
+    w = np.asarray(W.node_weights_from_latency(lat, 1.4))
+    order = np.argsort(-w)
+    np.testing.assert_array_equal(order, [1, 3, 0, 2])
+
+
+def test_geometric_weights_validation():
+    with pytest.raises(ValueError):
+        W.geometric_weights(0, 1.4)
+    with pytest.raises(ValueError):
+        W.geometric_weights(5, 2.5)
+    with pytest.raises(ValueError):
+        W.solve_steepness(5, 3)      # t > floor((n-1)/2)
