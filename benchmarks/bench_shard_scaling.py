@@ -1,0 +1,126 @@
+"""Beyond-paper: sharded multi-group WOC scaling (src/repro/shard).
+
+Sweeps G in {1, 2, 4, 8} consensus groups over a hash-partitioned object
+space with per-group client populations, plus a cross-group locality
+sweep and a WPaxos-style object-stealing ablation on the skewed
+drifting-working-set workload.
+
+Claims validated:
+  * G=1 sharded == unsharded runner committed-op count (bit-for-bit,
+    same seed) — the sharding layer is pay-for-what-you-use;
+  * near-linear aggregate throughput for local workloads (G=4 >= 2.5x
+    G=1; in this cost model the shared hot objects also shard their
+    slow-path leaders, so the observed scaling is super-linear);
+  * graceful degradation as cross-group traffic rises (p_local sweep);
+  * object stealing migrates a drifting working set home: migrations
+    occur and throughput beats the stealing-disabled ablation.
+"""
+
+from benchmarks.common import Claims, write_csv, write_json
+
+from repro.core.runner import RunConfig
+from repro.core.runner import run as run_flat
+from repro.core.simulator import CostModel
+from repro.shard import ShardedRunConfig, run_sharded
+
+GROUPS = [1, 2, 4, 8]
+BASE_OPS = 12_000        # per group, so per-group load is constant
+P_LOCAL = [1.0, 0.9, 0.7, 0.5]
+
+
+def _point(**kw) -> dict:
+    art = run_sharded(ShardedRunConfig(**kw))
+    r = art.result
+    return {"protocol": r.protocol, "groups": r.n_groups,
+            "group_size": r.group_size, "clients": r.n_clients,
+            "batch": r.batch_size, "locality": r.locality,
+            "ops": r.committed_ops, "tx_s": round(r.throughput_tx_s, 1),
+            "p50_ms": round(r.latency_p50_ms, 4),
+            "p99_ms": round(r.latency_p99_ms, 4),
+            "fast_frac": round(r.fast_path_frac, 4),
+            "remote_frac": round(r.remote_frac, 4),
+            "redirect_rate": round(r.redirect_rate, 5),
+            "migrations": r.migrations, "steal_hints": r.steal_hints,
+            "messages": r.messages}
+
+
+def run_bench(out_dir) -> list[str]:
+    claims = Claims()
+    rows = []
+
+    # -- uniform-locality group sweep --------------------------------------
+    by_g = {}
+    for g in GROUPS:
+        r = _point(n_groups=g, total_ops=BASE_OPS * g, batch_size=10,
+                   locality="uniform", seed=3)
+        rows.append(r)
+        by_g[g] = r["tx_s"]
+
+    flat = run_flat(RunConfig(protocol="woc", total_ops=BASE_OPS,
+                              batch_size=10, seed=3)).result
+    claims.check("Shard G=1 == unsharded committed ops (same seed)",
+                 by_g and rows[0]["ops"] == flat.committed_ops,
+                 f"sharded={rows[0]['ops']} flat={flat.committed_ops}")
+    claims.check("Shard G=4 uniform >= 2.5x G=1 aggregate throughput",
+                 by_g[4] >= 2.5 * by_g[1],
+                 f"G4={by_g[4]:.0f} G1={by_g[1]:.0f} "
+                 f"ratio={by_g[4] / by_g[1]:.2f}")
+    claims.check("Shard G=8 uniform >= 5x G=1 (near-linear)",
+                 by_g[8] >= 5.0 * by_g[1],
+                 f"G8={by_g[8]:.0f} ratio={by_g[8] / by_g[1]:.2f}")
+
+    # -- graceful degradation: cross-group traffic sweep at G=4 -------------
+    by_p = {}
+    for p in P_LOCAL:
+        r = _point(n_groups=4, total_ops=BASE_OPS * 4, batch_size=10,
+                   locality="mixed", p_local=p, steal_threshold=0, seed=3)
+        rows.append(r)
+        by_p[p] = r["tx_s"]
+    claims.check("Shard degradation is graceful: G=4 at 50% remote "
+                 "traffic keeps >= 35% of fully-local throughput",
+                 by_p[0.5] >= 0.35 * by_p[1.0],
+                 f"{ {p: round(v) for p, v in by_p.items()} }")
+
+    # -- object stealing on the drifting skewed workload --------------------
+    # WAN-flavored remote penalty (6 ms one-way to a non-home group): the
+    # regime WPaxos targets, where serving a client from a remote region
+    # caps its open-loop pipeline on RTT
+    wan = CostModel(net_remote_client=6e-3)
+    steal = _point(n_groups=4, total_ops=BASE_OPS * 4, batch_size=10,
+                   locality="drift", working_set=12, p_working=0.85,
+                   drift_every=300, steal_threshold=3, seed=7, costs=wan)
+    frozen = _point(n_groups=4, total_ops=BASE_OPS * 4, batch_size=10,
+                    locality="drift", working_set=12, p_working=0.85,
+                    drift_every=300, steal_threshold=0, seed=7, costs=wan)
+    rows += [steal, frozen]
+    claims.check("Object stealing migrates the working set "
+                 "(migrations > 0, remote fraction below ablation)",
+                 steal["migrations"] > 0
+                 and steal["remote_frac"] < frozen["remote_frac"],
+                 f"migrations={steal['migrations']} "
+                 f"remote {steal['remote_frac']:.3f} vs "
+                 f"{frozen['remote_frac']:.3f}")
+    claims.check("Object stealing beats static placement on the "
+                 "drifting WAN workload (>= 1.3x throughput, lower p50)",
+                 steal["tx_s"] >= 1.3 * frozen["tx_s"]
+                 and steal["p50_ms"] < frozen["p50_ms"],
+                 f"steal={steal['tx_s']:.0f} frozen={frozen['tx_s']:.0f} "
+                 f"ratio={steal['tx_s'] / max(frozen['tx_s'], 1e-9):.2f} "
+                 f"p50 {steal['p50_ms']:.2f} vs {frozen['p50_ms']:.2f} ms")
+
+    write_csv(out_dir, "shard_scaling", rows)
+    write_json(out_dir, "BENCH_shard", {
+        "bench": "shard_scaling",
+        "uniform_sweep": {str(g): by_g[g] for g in GROUPS},
+        "speedup_vs_g1": {str(g): round(by_g[g] / by_g[1], 3)
+                          for g in GROUPS},
+        "p_local_sweep": {str(p): by_p[p] for p in P_LOCAL},
+        "stealing": {"enabled": steal, "disabled": frozen},
+        "points": rows,
+        "claims": claims.lines,
+    })
+    return claims.lines
+
+
+# benchmarks/run.py invokes ``mod.run(out_dir)`` on every suite module
+run = run_bench  # noqa: F811 — intentional module-entrypoint alias

@@ -1,7 +1,9 @@
-"""Shared benchmark plumbing: run protocols, write CSVs, check claims."""
+"""Shared benchmark plumbing: run protocols, write CSVs/JSON artifacts,
+check claims."""
 
 from __future__ import annotations
 
+import json
 import pathlib
 import time
 
@@ -32,6 +34,16 @@ def write_csv(out_dir, name: str, rows: list[dict]) -> pathlib.Path:
         lines = [",".join(cols)]
         lines += [",".join(str(r[c]) for c in cols) for r in rows]
         path.write_text("\n".join(lines) + "\n")
+    return path
+
+
+def write_json(out_dir, name: str, payload: dict) -> pathlib.Path:
+    """Write a trajectory artifact (e.g. BENCH_shard.json): a structured
+    snapshot of a benchmark's sweep + claims for cross-PR comparison."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
     return path
 
 

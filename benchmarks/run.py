@@ -11,7 +11,7 @@ import time
 from benchmarks import (bench_batch_size, bench_client_scaling,
                         bench_conflict_rate, bench_grad_quorum,
                         bench_quorum_kernel, bench_server_scaling,
-                        bench_weights)
+                        bench_shard_scaling, bench_weights)
 
 SUITES = [
     ("weights_tables", bench_weights),
@@ -21,6 +21,7 @@ SUITES = [
     ("batch_size", bench_batch_size),
     ("client_scaling", bench_client_scaling),
     ("server_scaling", bench_server_scaling),
+    ("shard_scaling", bench_shard_scaling),
 ]
 
 

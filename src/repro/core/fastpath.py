@@ -94,7 +94,10 @@ class FastPathMixin:
             leader=leader, leader_voted=(leader == self.node_id))
         if fb.leader_voted:
             for op in ops:
-                dep = self.last_slow.get(op.obj)
+                # order after the object's last applied op on EITHER path
+                # (slow predecessors per Thm 2, and the previous fast
+                # commit — see last_applied in BaseReplica)
+                dep = self.last_applied.get(op.obj)
                 if dep is not None:
                     fb.deps[op.op_id] = [dep]
         self.fast_batches[fb.batch_id] = fb
@@ -184,7 +187,7 @@ class FastPathMixin:
                 mask[i] = True
                 self.register_inflight(op.obj, op.op_id, now)
                 if am_leader:
-                    dep = self.last_slow.get(op.obj)
+                    dep = self.last_applied.get(op.obj)
                     if dep is not None:
                         deps[i] = dep
         payload = {"fb": msg.payload["fb"], "mask": mask}

@@ -74,7 +74,7 @@ class ObjectManager:
 
     def __init__(self, *, hot_conflict_rate: float = 0.25,
                  hot_concurrency: int = 3, demote_after_ops: int = 8,
-                 latency_decay: float = 0.9):
+                 latency_decay: float = 0.9, post_migration_slow: int = 1):
         self.stats: Dict[int, ObjectStats] = {}
         self.in_flight: Dict[int, Dict[int, InFlight]] = {}  # obj -> op_id -> rec
         self.classes: Dict[int, ObjectClass] = {}
@@ -82,7 +82,40 @@ class ObjectManager:
         self.hot_concurrency = hot_concurrency
         self.demote_after_ops = demote_after_ops
         self.latency_decay = latency_decay
+        self.post_migration_slow = post_migration_slow
         self._clean_streak: Dict[int, int] = {}  # conflict-free ops in a row
+        # sharded deployments: per-object ownership epoch (bumped every
+        # WPaxos-style ownership transfer) + count of remaining forced-slow
+        # ops after a custody change (conservative re-entry window while
+        # replayed duplicates from the old owner group may still arrive)
+        self.epochs: Dict[int, int] = {}
+        self._fresh: Dict[int, int] = {}
+
+    # -- ownership epochs (sharded deployments, WPaxos-style stealing) ------
+
+    def note_ownership(self, obj: int, epoch: int) -> bool:
+        """Record a custody change for ``obj`` at ownership ``epoch``.
+
+        Returns True (and resets the object's conflict history, in-flight
+        entries and classification) when the epoch is new: statistics
+        gathered under the previous owner group describe a different
+        contention regime and must not leak into routing here. The next
+        ``post_migration_slow`` operations are forced onto the slow path —
+        the safe re-entry window for ops replayed across the migration.
+        """
+        if epoch <= self.epochs.get(obj, 0):
+            return False
+        self.epochs[obj] = epoch
+        self.stats.pop(obj, None)
+        self.in_flight.pop(obj, None)
+        self.classes.pop(obj, None)
+        self._clean_streak.pop(obj, None)
+        if self.post_migration_slow > 0:
+            self._fresh[obj] = self.post_migration_slow
+        return True
+
+    def ownership_epoch(self, obj: int) -> int:
+        return self.epochs.get(obj, 0)
 
     # -- classification ----------------------------------------------------
 
@@ -133,6 +166,13 @@ class ObjectManager:
         inflight[op_id] = InFlight(op_id, client, coordinator, now)
         self._reclassify(obj)
 
+        fresh = self._fresh.get(obj, 0)
+        if fresh:                        # just migrated here: route slow
+            if fresh <= 1:
+                self._fresh.pop(obj, None)
+            else:
+                self._fresh[obj] = fresh - 1
+            return Route.SLOW
         if conflicted or self.classes[obj] is not ObjectClass.INDEPENDENT:
             return Route.SLOW
         return Route.FAST

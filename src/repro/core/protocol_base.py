@@ -98,6 +98,13 @@ class BaseReplica(Node):
         # leader-side: last slow-path op applied per object (fast commits on
         # that object must order after it at every replica)
         self.last_slow: Dict[int, int] = {}
+        # last op applied per object on ANY path: the leader stamps it as a
+        # dependency when co-signing a fast round, so back-to-back fast
+        # commits on one object (different coordinators) cannot apply in
+        # different orders at replicas outside the second quorum — a
+        # reorder window that opens when an object is re-accessed faster
+        # than commit broadcasts propagate (sharded drift workloads)
+        self.last_applied: Dict[int, int] = {}
         # leader-side: count of queued/in-instance slow ops per object
         self._slow_obj_count: Dict[int, int] = {}
         # crash-recovery state transfer
@@ -226,8 +233,10 @@ class BaseReplica(Node):
             "store": dict(self.rsm.store),
             "applied": {k: list(v) for k, v in self.rsm.applied.items()},
             "applied_ops": set(self.rsm.applied_ops),
+            "obj_ops": {k: list(v) for k, v in self.rsm.obj_ops.items()},
             "apply_count": self.rsm.apply_count,
             "last_slow": dict(self.last_slow),
+            "last_applied": dict(self.last_applied),
             # the PENDING dep-ordered commit queue is part of the apply
             # order: without it a recovered node applies later commits
             # ahead of a blocked earlier one and diverges per-object
@@ -242,8 +251,12 @@ class BaseReplica(Node):
         self.rsm.applied.clear()
         self.rsm.applied.update({k: list(v) for k, v in p["applied"].items()})
         self.rsm.applied_ops = set(p["applied_ops"])
+        self.rsm.obj_ops.clear()
+        self.rsm.obj_ops.update({k: list(v)
+                                 for k, v in p.get("obj_ops", {}).items()})
         self.rsm.apply_count = p["apply_count"]
         self.last_slow = dict(p["last_slow"])
+        self.last_applied = dict(p.get("last_applied", {}))
         self._obj_buffer = {k: list(v) for k, v in p["obj_buffer"].items()}
         for obj, entries in self._obj_buffer.items():
             for op, _, _ in entries:
@@ -287,8 +300,28 @@ class BaseReplica(Node):
         deps = [d for d in (deps or []) if d not in self.rsm.applied_ops
                 and d != op.op_id]
         buf = self._obj_buffer.get(op.obj)
+        if not deps and buf and any(op.op_id in (bdeps or ())
+                                    for _, bdeps, _ in buf):
+            # a buffered commit is explicitly waiting on THIS op (e.g. the
+            # leader's own slow commit raced ahead of a remote fast commit
+            # it depends on): the dependency edge, not arrival order, is
+            # authoritative — apply now and release the queue, else the
+            # buffer deadlocks until dep_timeout force-applies in the
+            # wrong (inverted) order. Overtaking is safe: a no-dep arrival
+            # cannot be unordered w.r.t. an UNRELATED buffered commit,
+            # because the leader blocks fast co-signs while a slow commit
+            # on the object is unapplied locally (_slow_obj_count guard)
+            # and stamps last_applied afterwards — so any same-object pair
+            # either carries a dep edge or left the same sender link in a
+            # consistent order.
+            if op.op_id not in self.rsm.applied_ops:
+                self._apply_now(op, now, path)
+            self._drain_obj(op.obj, now)
+            return
         if deps or buf:
             # FIFO per object: never overtake an earlier buffered commit
+            # (same-object commits without a dep edge share a link, so
+            # arrival order is consistent across replicas)
             self._obj_buffer.setdefault(op.obj, []).append((op, deps, path))
             self.set_timer(self.gc_timeout, "dep_timeout",
                            {"obj": op.obj, "op_id": op.op_id})
@@ -306,6 +339,7 @@ class BaseReplica(Node):
         self.clear_inflight(op.obj, op.op_id)
         if path == "slow":
             self.last_slow[op.obj] = op.op_id
+        self.last_applied[op.obj] = op.op_id
         self.on_applied(op, now, path)
 
     def on_applied(self, op, now: float, path: str) -> None:

@@ -29,6 +29,10 @@ class RSM:
         self.store: Dict[int, int] = {}
         self.applied: Dict[int, List[int]] = defaultdict(list)  # obj -> values
         self.applied_ops: set[int] = set()
+        # per-object applied op ids (reads included): this is the unit of
+        # state a shard migration ships so the new owner group can dedupe
+        # replayed ops that already committed under the old owner
+        self.obj_ops: Dict[int, List[int]] = defaultdict(list)
         self.apply_count = 0
 
     def apply(self, op: Op) -> int | None:
@@ -36,6 +40,7 @@ class RSM:
         if op.op_id in self.applied_ops:
             return self.store.get(op.obj)
         self.applied_ops.add(op.op_id)
+        self.obj_ops[op.obj].append(op.op_id)
         self.apply_count += 1
         if op.kind == "w":
             self.store[op.obj] = op.value

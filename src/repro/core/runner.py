@@ -24,6 +24,17 @@ PROTOCOLS: Dict[str, Type[BaseReplica]] = {
 LEADER_BASED = {"cabinet", "paxos"}
 
 
+def client_target_fn(protocol: str, ci: int, n: int, offset: int = 0):
+    """Replica-choice policy for client ``ci`` over a group of ``n``
+    replicas whose ids start at ``offset``. Leader-based protocols pin the
+    group's initial leader; the rest round-robin. Shared with the sharded
+    runner (src/repro/shard), where ``offset`` selects the owning group's
+    id block."""
+    if protocol in LEADER_BASED:
+        return lambda k: offset                       # initial leader
+    return lambda k, ci=ci: offset + (ci + k) % n     # round-robin
+
+
 @dataclasses.dataclass
 class RunConfig:
     protocol: str = "woc"
@@ -62,16 +73,12 @@ def run(cfg: RunConfig) -> RunArtifacts:
     total_batches = max(1, cfg.total_ops // max(1, cfg.batch_size))
     base, rem = divmod(total_batches, cfg.n_clients)
 
-    def make_target(ci: int):
-        if cfg.protocol in LEADER_BASED:
-            return lambda k: 0                       # initial leader
-        return lambda k, ci=ci: (ci + k) % cfg.n_replicas  # round-robin
-
     clients = []
     for ci in range(cfg.n_clients):
         c = Client(cfg.n_replicas + ci, sim, batch_size=cfg.batch_size,
                    max_inflight=cfg.max_inflight, workload=cfg.workload,
-                   target_fn=make_target(ci),
+                   target_fn=client_target_fn(cfg.protocol, ci,
+                                              cfg.n_replicas),
                    total_batches=max(1, base + (1 if ci < rem else 0)),
                    value_seed=cfg.seed)
         sim.add_node(c)

@@ -52,6 +52,12 @@ class CostModel:
     net_client: float = 250e-6    # one-way delay client<->replica
     net_jitter: float = 60e-6     # uniform jitter bound
     timeout: float = 30e-3        # fast-path / election timeout
+    # Sharded deployments (src/repro/shard): consensus groups live in
+    # different regions, so cross-group replica traffic and a client
+    # talking to a non-home group pay a WAN penalty. Both are zero-cost
+    # in single-group runs (there is only one group).
+    net_cross: float = 300e-6     # extra one-way delay across groups
+    net_remote_client: float = 1.2e-3  # extra one-way client<->remote group
 
     # Heterogeneity: mild CPU spread + strongly heterogeneous network
     # distance (a geo-distributed deployment — §2.3's multi-region story).
@@ -142,10 +148,20 @@ class Simulation:
     """Event loop with FIFO service queues and deterministic jitter."""
 
     def __init__(self, n_replicas: int, costs: CostModel | None = None,
-                 seed: int = 0):
+                 seed: int = 0, group_size: int | None = None,
+                 client_home: Dict[int, int] | None = None):
         self.n = n_replicas
         self.costs = costs or CostModel()
         self.seed = seed
+        # multi-group node-id namespacing (src/repro/shard): replica global
+        # ids are laid out in contiguous per-group blocks of ``group_size``
+        # (group g owns [g*group_size, (g+1)*group_size)); CPU speed and
+        # network distance are indexed by the *local* id so every group
+        # mirrors the single-group heterogeneity profile. ``client_home``
+        # maps client ids to their home group for the WAN locality penalty.
+        # Defaults reduce to the original single-group behaviour exactly.
+        self.group_size = group_size or n_replicas
+        self.client_home: Dict[int, int] = dict(client_home or {})
         self.now = 0.0
         self.nodes: Dict[int, Node] = {}
         self._heap: List[Tuple[float, int, str, object]] = []
@@ -171,13 +187,29 @@ class Simulation:
     def _is_replica(self, node_id: int) -> bool:
         return node_id < self.n
 
+    def _local(self, node_id: int) -> int:
+        """Group-local replica id (identity in single-group simulations)."""
+        return node_id % self.group_size
+
+    def _group(self, node_id: int) -> int:
+        return node_id // self.group_size
+
     def _net_delay(self, src: int, dst: int) -> float:
         c = self.costs
-        base = (c.net_base if self._is_replica(src) and self._is_replica(dst)
-                else c.net_client)
+        if self._is_replica(src) and self._is_replica(dst):
+            base = c.net_base
+            if self._group(src) != self._group(dst):
+                base += c.net_cross
+        else:
+            base = c.net_client
+            rep, cli = (src, dst) if self._is_replica(src) else (dst, src)
+            home = self.client_home.get(cli)
+            if (home is not None and self._is_replica(rep)
+                    and home != self._group(rep)):
+                base += c.net_remote_client
         for e in (src, dst):
             if self._is_replica(e):
-                base += c.dist(e)
+                base += c.dist(self._local(e))
         jit = _hash_uniform(self.seed, src, dst, next(self._msg_seq)) \
             * c.net_jitter
         return base + jit
@@ -186,12 +218,13 @@ class Simulation:
         c = self.costs
         if not self._is_replica(node_id):
             return 1e-6  # clients are not the bottleneck under study
-        return (c.c_recv + c.c_parse * msg.size_ops) * c.speed(node_id)
+        return (c.c_recv + c.c_parse * msg.size_ops) \
+            * c.speed(self._local(node_id))
 
     def _send_cost(self, node_id: int) -> float:
         if not self._is_replica(node_id):
             return 1e-6
-        return self.costs.c_send * self.costs.speed(node_id)
+        return self.costs.c_send * self.costs.speed(self._local(node_id))
 
     def busy(self, node_id: int, seconds: float) -> None:
         """Charge CPU time to a node (per-op coordination / apply costs)."""
@@ -333,6 +366,11 @@ class Client(Node):
         self._next_batch = itertools.count()
         self.value_seed = value_seed
         self._suspect: Dict[int, float] = {}   # replica -> suspicion expiry
+        # client-global ack dedup: an op may be credited more than once
+        # (retries reaching two coordinators; in sharded runs the old and
+        # new owner across a migration, under different sub-batch ids) —
+        # flow-control accounting must count each op exactly once
+        self._acked: set = set()
 
     def _pick_target(self, k: int) -> int:
         t = self.target_fn(k)
@@ -345,29 +383,40 @@ class Client(Node):
     def start(self) -> None:
         self._maybe_submit()
 
+    def _sample_object(self) -> int:
+        """Object-choice hook (ShardClient overrides with locality modes)."""
+        return self.workload.sample_object(self.node_id, self.rng)
+
+    def _make_batch(self) -> List[Op]:
+        ops = []
+        for _ in range(self.batch_size):
+            oid = (self.node_id << 40) | next(self._next_op)
+            obj = self._sample_object()
+            kind = ("r" if self.rng.random()
+                    < self.workload.reads_fraction else "w")
+            ops.append(Op(oid, self.node_id, obj, kind,
+                          value=oid ^ self.value_seed,
+                          submit_time=self.sim.now))
+        return ops
+
+    def _dispatch(self, ops: List[Op]) -> None:
+        """Routing hook (ShardClient splits per owning group instead)."""
+        bid = (self.node_id << 32) | next(self._next_batch)
+        target = self._pick_target(self.submitted)
+        self._open[bid] = {"ops": ops, "attempt": 0, "target": target}
+        self.send(target, "client_req",
+                  {"batch_id": bid, "ops": ops}, size_ops=len(ops))
+        self.set_timer(self.RETRY, "client_retry", {"bid": bid})
+
     def _maybe_submit(self) -> None:
         while (self.submitted < self.total
                and self.inflight_ops + self.batch_size
                <= self.max_inflight_ops):
-            bid = (self.node_id << 32) | next(self._next_batch)
-            ops = []
-            for _ in range(self.batch_size):
-                oid = (self.node_id << 40) | next(self._next_op)
-                obj = self.workload.sample_object(self.node_id, self.rng)
-                kind = ("r" if self.rng.random()
-                        < self.workload.reads_fraction else "w")
-                ops.append(Op(oid, self.node_id, obj, kind,
-                              value=oid ^ self.value_seed,
-                              submit_time=self.sim.now))
+            ops = self._make_batch()
             self.ops.extend(ops)
             self.submitted += 1
             self.inflight_ops += self.batch_size
-            target = self._pick_target(self.submitted)
-            self._open[bid] = {"ops": ops, "acked_ids": set(), "attempt": 0,
-                               "target": target}
-            self.send(target, "client_req",
-                      {"batch_id": bid, "ops": ops}, size_ops=len(ops))
-            self.set_timer(self.RETRY, "client_retry", {"bid": bid})
+            self._dispatch(ops)
 
     def on_client_reply(self, msg: Msg, now: float) -> None:
         bid = msg.payload["batch_id"]
@@ -375,16 +424,24 @@ class Client(Node):
         if rec is None:
             return                       # duplicate ack after retry
         if "op_ids" in msg.payload:
-            fresh = set(msg.payload["op_ids"]) - rec["acked_ids"]
+            ids = set(msg.payload["op_ids"])
         else:                            # whole-batch ack (EPaxos finish)
-            fresh = {op.op_id for op in rec["ops"]} - rec["acked_ids"]
-        rec["acked_ids"] |= fresh
-        take = len(fresh)
-        self.inflight_ops -= take
-        self.completed_ops += take
-        if len(rec["acked_ids"]) >= self.batch_size:
+            ids = {op.op_id for op in rec["ops"]}
+        fresh = ids - self._acked
+        self._acked |= fresh
+        self.inflight_ops -= len(fresh)
+        self.completed_ops += len(fresh)
+        if all(op.op_id in self._acked for op in rec["ops"]):
             self._open.pop(bid, None)
         self._maybe_submit()
+
+    def _retry_target(self, rec: dict) -> int:
+        """Pick a different replica for a retried batch (ShardClient
+        overrides to stay inside the owning group's id block)."""
+        target = self._pick_target(self.submitted + rec["attempt"] * 7 + 1)
+        if target == rec["target"]:
+            target = (target + 1) % self.sim.n
+        return target
 
     def on_timer(self, name: str, payload: dict, now: float) -> None:
         rec = self._open.get(payload["bid"])
@@ -394,11 +451,8 @@ class Client(Node):
         # the unresponsive target is suspected for a while: new batches
         # fail over immediately instead of paying a retry timeout each
         self._suspect[rec["target"]] = now + self.RETRY * 16
-        target = self._pick_target(self.submitted + rec["attempt"] * 7 + 1)
-        if target == rec["target"]:
-            target = (target + 1) % self.sim.n
-        rec["target"] = target
-        self.send(target, "client_req",
+        rec["target"] = self._retry_target(rec)
+        self.send(rec["target"], "client_req",
                   {"batch_id": payload["bid"], "ops": rec["ops"]},
                   size_ops=len(rec["ops"]))
         self.set_timer(self.RETRY * min(4, 1 + rec["attempt"]),

@@ -1,0 +1,182 @@
+"""Sharded experiment runner: G independent WOC groups, one event loop.
+
+``run_sharded`` builds ``n_groups`` consensus groups (each an unmodified
+protocol cluster behind a shard gate) over a hash-partitioned object
+space, homes ``n_clients_per_group`` router clients at each group, and
+drives the whole deployment inside one deterministic simulation. With
+``n_groups=1`` it reduces to :func:`repro.core.runner.run` (same cost
+model, same id layout, no redirects or migrations) — the G=1 equivalence
+tests pin that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.runner import PROTOCOLS
+from repro.core.simulator import (CostModel, Simulation, Workload,
+                                  collect_metrics)
+from repro.shard.gate import GroupGate, make_sharded_replica
+from repro.shard.groupview import GroupNodeProxy, GroupView
+from repro.shard.router import ShardClient, ShardWorkload
+
+
+@dataclasses.dataclass
+class ShardedRunConfig:
+    protocol: str = "woc"
+    n_groups: int = 2
+    n_replicas_per_group: int = 5
+    n_clients_per_group: int = 2
+    batch_size: int = 10
+    max_inflight: int = 5
+    total_ops: int = 40_000            # across all clients, all groups
+    t_fail: int = 1
+    locality: str = "uniform"          # "uniform" | "mixed" | "drift"
+    p_local: float = 0.9
+    working_set: int = 16
+    p_working: float = 0.85
+    drift_every: int = 400
+    steal_threshold: int = 3           # remote hits per hint; <=0 disables
+    steal_cooldown: float = 0.25
+    workload: Workload = dataclasses.field(default_factory=Workload)
+    costs: CostModel = dataclasses.field(default_factory=CostModel)
+    seed: int = 0
+    sim_time_cap: float = 300.0
+
+
+@dataclasses.dataclass
+class ShardGroupStats:
+    group: int
+    ops_admitted: int
+    redirects: int
+    fenced_ops: int
+    migrations_in: int
+    migrations_out: int
+    steals_started: int
+    steal_nacks: int
+
+
+@dataclasses.dataclass
+class ShardedRunResult:
+    protocol: str
+    n_groups: int
+    group_size: int
+    n_clients: int
+    batch_size: int
+    locality: str
+    committed_ops: int
+    makespan_s: float
+    throughput_tx_s: float
+    latency_avg_ms: float
+    latency_p50_ms: float
+    latency_p99_ms: float
+    fast_path_frac: float
+    messages: int
+    migrations: int
+    redirected_ops: int
+    redirect_rate: float               # redirected ops / committed ops
+    remote_frac: float                 # dispatches to a non-home group
+    steal_hints: int
+    per_group: List[ShardGroupStats] = dataclasses.field(default_factory=list)
+
+    def row(self) -> str:
+        return (f"{self.protocol},{self.n_groups},{self.group_size},"
+                f"{self.n_clients},{self.batch_size},{self.locality},"
+                f"{self.committed_ops},{self.throughput_tx_s:.0f},"
+                f"{self.latency_p50_ms:.3f},{self.latency_p99_ms:.3f},"
+                f"{self.migrations},{self.redirect_rate:.4f},"
+                f"{self.remote_frac:.4f}")
+
+
+@dataclasses.dataclass
+class ShardedRunArtifacts:
+    result: ShardedRunResult
+    sim: Simulation
+    replicas: List[List[object]]       # [group][local] protocol replicas
+    gates: List[GroupGate]
+    clients: List[ShardClient]
+
+
+def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
+    G, npg = cfg.n_groups, cfg.n_replicas_per_group
+    n_clients = G * cfg.n_clients_per_group
+    # client ci is homed at group ci % G: every group hosts the same
+    # client population, and with G=1 ids collapse onto the flat layout
+    client_home = {G * npg + ci: ci % G for ci in range(n_clients)}
+    sim = Simulation(G * npg, cfg.costs, seed=cfg.seed, group_size=npg,
+                     client_home=client_home)
+
+    cls = make_sharded_replica(PROTOCOLS[cfg.protocol])
+    t = max(1, min(cfg.t_fail, (npg - 1) // 2))
+    gates = [GroupGate(g, G, npg, seed=cfg.seed,
+                       steal_cooldown=cfg.steal_cooldown) for g in range(G)]
+    replicas: List[List[object]] = []
+    for g in range(G):
+        view = GroupView(sim, g, npg)
+        grp = [cls(i, view, gate=gates[g], t_fail=t,
+                   group_cap=max(cfg.batch_size, 1)) for i in range(npg)]
+        for rep in grp:
+            sim.add_node(GroupNodeProxy(rep, view))
+            rep.start_heartbeats()
+        replicas.append(grp)
+
+    swl = ShardWorkload(locality=cfg.locality, p_local=cfg.p_local,
+                        working_set=cfg.working_set,
+                        p_working=cfg.p_working,
+                        drift_every=cfg.drift_every, base=cfg.workload)
+    total_batches = max(1, cfg.total_ops // max(1, cfg.batch_size))
+    base, rem = divmod(total_batches, n_clients)
+    clients: List[ShardClient] = []
+    for ci in range(n_clients):
+        c = ShardClient(
+            G * npg + ci, sim, protocol=cfg.protocol, n_groups=G,
+            group_size=npg, home_group=ci % G, client_index=ci // G,
+            shard_workload=swl, steal_threshold=cfg.steal_threshold,
+            map_seed=cfg.seed, batch_size=cfg.batch_size,
+            max_inflight=cfg.max_inflight,
+            total_batches=max(1, base + (1 if ci < rem else 0)),
+            value_seed=cfg.seed)
+        sim.add_node(c)
+        clients.append(c)
+
+    for c in clients:
+        c.start()
+    sim.run(until=cfg.sim_time_cap, stop=lambda: all(c.done()
+                                                     for c in clients))
+    return ShardedRunArtifacts(
+        _collect(cfg, sim, clients, gates), sim, replicas, gates, clients)
+
+
+def _collect(cfg: ShardedRunConfig, sim: Simulation,
+             clients: List[ShardClient],
+             gates: List[GroupGate]) -> ShardedRunResult:
+    # shared aggregation (latency percentiles, fast-path fraction, ...)
+    # comes from the single-group collector; only shard metrics are added
+    m = collect_metrics(cfg.protocol, sim, clients, cfg.batch_size,
+                        t_start=0.0)
+    committed = m.committed_ops
+    redirected = sum(c.redirected_ops for c in clients)
+    remote = sum(c.remote_ops for c in clients)
+    return ShardedRunResult(
+        protocol=cfg.protocol, n_groups=cfg.n_groups,
+        group_size=cfg.n_replicas_per_group, n_clients=len(clients),
+        batch_size=cfg.batch_size, locality=cfg.locality,
+        committed_ops=committed, makespan_s=m.makespan_s,
+        throughput_tx_s=m.throughput_tx_s,
+        latency_avg_ms=m.latency_avg_ms,
+        latency_p50_ms=m.latency_p50_ms,
+        latency_p99_ms=m.latency_p99_ms,
+        fast_path_frac=m.fast_path_frac,
+        messages=m.messages,
+        migrations=sum(g.migrations_in for g in gates),
+        redirected_ops=redirected,
+        redirect_rate=redirected / committed if committed else 0.0,
+        remote_frac=remote / max(1, committed),
+        steal_hints=sum(c.hints_sent for c in clients),
+        per_group=[ShardGroupStats(
+            group=g.group, ops_admitted=g.ops_admitted,
+            redirects=g.redirects, fenced_ops=g.fenced_ops,
+            migrations_in=g.migrations_in, migrations_out=g.migrations_out,
+            steals_started=g.steals_started, steal_nacks=g.steal_nacks)
+            for g in gates])

@@ -1,0 +1,105 @@
+"""Property-testing shim: real hypothesis when installed, else a small
+deterministic fallback.
+
+The fallback implements the slice of the hypothesis API this suite uses
+(``given``, ``settings``, ``st.integers/floats/sampled_from/data``) by
+running each property on a fixed pseudo-random sample grid. It trades
+shrinking and coverage for zero dependencies — enough to keep the
+invariants exercised on machines without optional dev deps.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    # deliberately small: the fallback is a smoke-level grid so the tier-1
+    # gate stays fast on dep-less machines (the Pallas interpret-mode
+    # kernel sweeps cost tens of seconds per example); CI installs real
+    # hypothesis and runs the full example budgets
+    _MAX_EXAMPLES = 4
+
+    class _Strategy:
+        def sample(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return self.options[int(rng.integers(0, len(self.options)))]
+
+    class _DataStrategy(_Strategy):
+        pass
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.sample(self._rng)
+
+    class st:  # noqa: N801 — mimics ``hypothesis.strategies``
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_max_examples", None) or _MAX_EXAMPLES,
+                    _MAX_EXAMPLES)
+
+            def _value(strategy, rng):
+                if isinstance(strategy, _DataStrategy):
+                    return _Data(rng)
+                return strategy.sample(rng)
+
+            def wrapper():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    args = [_value(s, rng) for s in arg_strategies]
+                    kwargs = {k: _value(s, rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

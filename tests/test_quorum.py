@@ -2,7 +2,7 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import weights as W
 from repro.core.quorum import quorum_commit, quorums_intersect

@@ -1,0 +1,216 @@
+"""Sharded multi-group WOC: partition/ownership units, G=1 equivalence,
+NOT_OWNER redirects, and ownership-transfer linearizability."""
+
+import pytest
+
+from repro.core.object_manager import ObjectManager, Route
+from repro.core.runner import RunConfig, run
+from repro.core.simulator import CostModel
+from repro.shard import ShardedRunConfig, ShardMap, resolve_owner, run_sharded
+
+
+# ---------------------------------------------------------------------------
+# ShardMap units
+# ---------------------------------------------------------------------------
+
+def test_shard_map_partition_is_stable_and_balanced():
+    m = ShardMap(4, seed=7)
+    objs = list(range(10_000))
+    groups = [m.default_group(o) for o in objs]
+    assert groups == [m.default_group(o) for o in objs]     # stable
+    for g in range(4):
+        frac = groups.count(g) / len(objs)
+        assert 0.2 < frac < 0.3                             # ~uniform
+
+    m2 = ShardMap(4, seed=7)
+    assert groups[:100] == [m2.default_group(o) for o in objs[:100]]
+
+
+def test_shard_map_epochs_monotonic():
+    m = ShardMap(2)
+    obj = 42
+    g0 = m.default_group(obj)
+    assert m.owner(obj) == (g0, 0)
+    assert m.record(obj, 1 - g0, 1)
+    assert m.owner(obj) == (1 - g0, 1)
+    assert not m.record(obj, g0, 1)          # stale epoch ignored
+    assert not m.record(obj, g0, 0)
+    assert m.owner(obj) == (1 - g0, 1)
+    assert m.record(obj, g0, 2)
+    assert m.owner(obj) == (g0, 2)
+
+
+def test_shard_map_fencing():
+    m = ShardMap(2)
+    assert not m.is_fenced(5)
+    m.fence(5)
+    assert m.is_fenced(5)
+    m.unfence(5)
+    assert not m.is_fenced(5)
+
+
+# ---------------------------------------------------------------------------
+# ObjectManager ownership epochs
+# ---------------------------------------------------------------------------
+
+def test_object_manager_ownership_epoch_forces_slow_reentry():
+    om = ObjectManager()
+    # steady single-client object rides the fast path
+    assert om.route(1, 100, 9, 0, 0.0) is Route.FAST
+    om.complete(1, 100, 0.1)
+    # custody change: stats reset, next op is forced slow, then fast again
+    assert om.note_ownership(1, 3)
+    assert om.ownership_epoch(1) == 3
+    assert om.route(1, 101, 9, 0, 0.2) is Route.SLOW
+    om.complete(1, 101, 0.3)
+    assert om.route(1, 102, 9, 0, 0.4) is Route.FAST
+    # stale epoch is a no-op
+    assert not om.note_ownership(1, 2)
+    om.complete(1, 102, 0.5)
+    assert om.route(1, 103, 9, 0, 0.6) is Route.FAST
+
+
+# ---------------------------------------------------------------------------
+# G=1 equivalence with the unsharded runner
+# ---------------------------------------------------------------------------
+
+def test_g1_sharded_matches_unsharded_committed_ops():
+    sharded = run_sharded(ShardedRunConfig(
+        n_groups=1, n_replicas_per_group=5, n_clients_per_group=2,
+        total_ops=4000, batch_size=10, seed=3)).result
+    flat = run(RunConfig(protocol="woc", n_replicas=5, n_clients=2,
+                         total_ops=4000, batch_size=10, seed=3)).result
+    assert sharded.committed_ops == flat.committed_ops == 4000
+    assert sharded.migrations == 0
+    assert sharded.redirected_ops == 0
+    assert sharded.remote_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Multi-group runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", ["woc", "cabinet", "epaxos"])
+def test_sharded_all_ops_commit(proto):
+    art = run_sharded(ShardedRunConfig(
+        protocol=proto, n_groups=2, n_replicas_per_group=3,
+        total_ops=2000, batch_size=10, seed=1))
+    assert art.result.committed_ops == 2000
+    assert all(op.commit_time >= 0 for c in art.clients for op in c.ops)
+    # per-group state-machine safety: within each group every replica's
+    # per-object apply sequence is a prefix of the most advanced one.
+    # (Skipped for epaxos, matching test_system.py: the simplified EPaxos
+    # here does not order conflicting commits across replicas.)
+    if proto != "epaxos":
+        for grp in art.replicas:
+            _check_group_prefix(grp)
+
+
+def _check_group_prefix(grp):
+    rsms = [r.rsm for r in grp]
+    objects = set()
+    for m in rsms:
+        objects |= set(m.applied)
+    for obj in objects:
+        seqs = [m.applied[obj] for m in rsms if obj in m.applied]
+        longest = max(seqs, key=len)
+        for s in seqs:
+            assert s == longest[:len(s)], f"divergence on obj {obj}"
+
+
+def _drift_run(proto="woc", seed=5):
+    return run_sharded(ShardedRunConfig(
+        protocol=proto, n_groups=2, n_replicas_per_group=3,
+        locality="drift", working_set=8, p_working=0.9, steal_threshold=2,
+        total_ops=4000, batch_size=10, seed=seed))
+
+
+def test_stealing_migrates_and_redirects():
+    art = _drift_run()
+    r = art.result
+    assert r.committed_ops == 4000
+    assert r.migrations >= 1, "drift workload must trigger object stealing"
+    assert r.redirected_ops >= 1, "stale routes must surface as redirects"
+    # NOT_OWNER redirect correctness: every redirected op still committed
+    # exactly once (completion accounting is op-unique), and client cached
+    # maps agree with the authoritative custody chain for migrated objects
+    maps = {g.group: g.map for g in art.gates}
+    for g in art.gates:
+        for obj, frm, to, epoch in g.migration_log:
+            owner, ep = resolve_owner(maps, obj)
+            assert ep >= epoch
+            for c in art.clients:
+                cg, cep = c.smap.owner(obj)
+                if cep == ep:           # client saw the latest custody news
+                    assert cg == owner
+
+
+def test_ownership_transfer_linearizability():
+    """Across a migration no op is lost or applied twice, and the object's
+    history moves by prefix-extension between custody holders."""
+    art = _drift_run()
+    refs = [max((r.rsm for r in grp), key=lambda m: m.apply_count)
+            for grp in art.replicas]
+    migrated = {e[0] for g in art.gates for e in g.migration_log}
+    assert migrated
+    maps = {g.group: g.map for g in art.gates}
+    # no op applied twice: write values are unique per op, so a double
+    # apply shows up as a duplicate in some group's per-object sequence
+    for ref in refs:
+        for obj, vals in ref.applied.items():
+            assert len(vals) == len(set(vals)), f"double apply on {obj}"
+    for obj in migrated:
+        fg, _ = resolve_owner(maps, obj)
+        final = refs[fg].applied.get(obj, [])
+        for ref in refs:
+            seq = ref.applied.get(obj, [])
+            assert seq == final[:len(seq)], \
+                f"custody history of {obj} is not prefix-consistent"
+    # no acked op lost: every committed write's value is in the final
+    # owner's history
+    for c in art.clients:
+        for op in c.ops:
+            if op.kind == "w" and op.commit_time >= 0:
+                fg, _ = resolve_owner(maps, op.obj)
+                assert op.value in refs[fg].applied.get(op.obj, []), \
+                    f"acked write {op.op_id} lost across migration"
+
+
+def test_transfer_linearizability_adversarial_timing():
+    """Client RTT far below intra-group latency: redirected replays race
+    ahead of shard_install broadcasts, and the leader's slow commits race
+    ahead of the remote fast commits they depend on. Every replica (not
+    just the most advanced) must stay prefix-consistent, with no value
+    applied twice. Regression for two ordering bugs this exposed: the
+    install-time state clobber and the per-object FIFO buffer inverting
+    an explicit dependency edge."""
+    art = run_sharded(ShardedRunConfig(
+        n_groups=2, n_replicas_per_group=3, locality="drift",
+        working_set=8, p_working=0.9, steal_threshold=2, total_ops=3000,
+        batch_size=10, seed=5,
+        costs=CostModel(net_client=1e-6, net_base=2e-3)))
+    assert art.result.committed_ops == 3000
+    assert art.result.migrations >= 1
+    refs = [max((x.rsm for x in grp), key=lambda m: m.apply_count)
+            for grp in art.replicas]
+    maps = {g.group: g.map for g in art.gates}
+    for ref in refs:
+        for obj, vals in ref.applied.items():
+            assert len(vals) == len(set(vals)), f"double apply on {obj}"
+    for obj in {e[0] for g in art.gates for e in g.migration_log}:
+        fg, _ = resolve_owner(maps, obj)
+        final = refs[fg].applied.get(obj, [])
+        for grp in art.replicas:
+            for rep in grp:
+                seq = rep.rsm.applied.get(obj, [])
+                assert seq == final[:len(seq)], \
+                    f"replica-level prefix violation on {obj}"
+
+
+def test_uniform_locality_stays_home():
+    r = run_sharded(ShardedRunConfig(
+        n_groups=4, n_replicas_per_group=3, total_ops=4000, batch_size=10,
+        locality="uniform", seed=2)).result
+    assert r.committed_ops == 4000
+    # only the shared common/hot namespaces (~10% of draws) leave home
+    assert r.remote_frac < 0.15
