@@ -9,12 +9,14 @@ from benchmarks.common import Claims, run_point, write_csv
 BATCHES = [10, 100, 500, 1000, 2000, 4000]
 
 
-def run(out_dir) -> list[str]:
+def run(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
     rows = []
     by = {}
     for b in BATCHES:
         tot = min(240_000, max(20_000, b * 50))
+        if quick:
+            tot = min(60_000, max(5_000, b * 15))
         for proto in ("woc", "cabinet"):
             r = run_point(protocol=proto, batch_size=b, total_ops=tot)
             rows.append(r)

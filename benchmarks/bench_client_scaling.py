@@ -8,12 +8,13 @@ from benchmarks.common import Claims, run_point, write_csv
 CLIENTS = [2, 3, 5, 7, 9]
 
 
-def run(out_dir) -> list[str]:
+def run(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
+    total = 6_000 if quick else 20_000
     rows, by = [], {}
     for nc in CLIENTS:
         for proto in ("woc", "cabinet"):
-            r = run_point(protocol=proto, batch_size=10, total_ops=20_000,
+            r = run_point(protocol=proto, batch_size=10, total_ops=total,
                           n_clients=nc)
             rows.append(r)
             by[(proto, nc)] = r["tx_s"]

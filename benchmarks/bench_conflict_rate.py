@@ -10,14 +10,15 @@ from repro.core.simulator import Workload
 RATES = [0.0, 0.02, 0.10, 0.25, 0.50, 0.75, 1.00]
 
 
-def run(out_dir) -> list[str]:
+def run(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
+    total = 4_000 if quick else 12_000
     rows = []
     by = {}
     for rate in RATES:
         w = Workload(p_independent=1 - rate, p_common=0.0, p_hot=rate)
         for proto in ("woc", "cabinet"):
-            r = run_point(protocol=proto, batch_size=10, total_ops=12_000,
+            r = run_point(protocol=proto, batch_size=10, total_ops=total,
                           workload=w)
             r["conflict"] = rate
             rows.append(r)

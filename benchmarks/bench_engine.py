@@ -1,0 +1,186 @@
+"""Engine micro-benchmark (PR 2 tentpole): raw simulator throughput.
+
+Every paper claim this repo validates is measured on the discrete-event
+simulator, so its events/sec is the hard ceiling on how many scenarios,
+seeds, and cluster sizes each PR can afford. This suite pins the engine's
+speed on the fixed 9-replica reference scenario (the largest cluster in
+the paper's §5 sweeps, 4 open-loop clients, batch 100 — the throughput
+configuration that dominates sweep wall time; the paper-default batch-10
+configuration rides along as a secondary point) and records both in
+``BENCH_engine.json`` so cross-PR regressions are visible.
+
+Measurement notes:
+
+  * events/sec comes from ``Simulation.wall_s`` (perf_counter time inside
+    ``Simulation.run`` only — no setup, no metric collection), best of
+    ``repeats`` runs to shed scheduler noise; the container's CPU share
+    fluctuates, so single samples are untrustworthy.
+  * ``BASELINE_*`` are the pre-overhaul engine (commit b40ecf8) measured
+    at PR time with this exact scenario and methodology, in the same
+    session as a pure-Python **calibration probe**
+    (:func:`calibration_score`). The container's CPU share fluctuates
+    ~1.5x minute-to-minute and CI hardware differs entirely, so at claim
+    time the probe runs again and the baseline is scaled by the measured
+    machine-speed ratio — the comparison is approximately
+    machine-independent instead of hostage to scheduler phase. Treat a
+    full-mode claim MISS as "re-baseline on this machine" only after a
+    repeat run also misses.
+  * the speedup claim uses events / *total* wall (setup included) on
+    both sides — the pre-PR engine had no engine-only wall telemetry, so
+    like must be compared with like; the engine-only ``events_per_sec``
+    is recorded alongside as telemetry.
+  * determinism is also asserted here (same seed => identical committed
+    trace), because a fast engine that drifts is worthless for baselines.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Claims, write_json
+
+from repro.core.runner import RunConfig
+from repro.core.runner import run as run_experiment
+
+# pre-PR engine (commit b40ecf8) on the reference scenario: best-of-4,
+# events / total wall, measured in one session together with the
+# calibration probe below — see module docstring before editing. The
+# reference is the throughput configuration (batch 100): the §5-style
+# sweeps' wall time is dominated by their large-batch points, which is
+# exactly the cost the overhaul targets. The paper-default batch-10
+# configuration is recorded alongside as a secondary point.
+BASELINE_EVENTS_PER_SEC = 4_208.0
+SECONDARY_BASELINE_EVENTS_PER_SEC = 32_303.0     # batch=10, 10k ops
+BASELINE_PROBE_SCORE = 2_850_000.0               # calibration_score() then
+SPEEDUP_TARGET = 3.0
+
+
+def calibration_score(iters: int = 300_000) -> float:
+    """Machine-speed probe: interpreter ops/sec on an engine-like mix of
+    dict traffic, int math, and bound-method-free loops. Baselines are
+    recorded together with this score; claims scale them by the ratio of
+    the probe at claim time, making the comparison approximately
+    machine-independent."""
+    best = 0.0
+    for _ in range(3):
+        d: dict = {}
+        acc = 0
+        t0 = time.perf_counter()
+        for i in range(iters):
+            k = (i * 0x9E3779B97F4A7C15) & 1023
+            d[k] = i
+            acc += d.get((k * 7) & 1023, 0)
+        dt = time.perf_counter() - t0
+        if dt > 0:
+            best = max(best, iters / dt)
+    return best
+
+REFERENCE = dict(protocol="woc", n_replicas=9, n_clients=4, batch_size=100,
+                 t_fail=2, seed=0)
+SECONDARY = dict(protocol="woc", n_replicas=9, n_clients=4, batch_size=10,
+                 t_fail=2, seed=0)
+
+
+def _reference_cfg(total_ops: int) -> RunConfig:
+    return RunConfig(total_ops=total_ops, **REFERENCE)
+
+
+def _trace_sig(art) -> tuple:
+    """Determinism signature: the committed-op trace, order-independent of
+    wall clock (no telemetry fields)."""
+    ops = sorted((op.op_id, op.obj, op.commit_time, op.path)
+                 for c in art.clients for op in c.ops)
+    return (len(ops), hash(tuple(ops)),
+            art.result.makespan_s, art.result.committed_ops)
+
+
+def _measure(cfg_kw: dict, total: int, repeats: int) -> dict:
+    best = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        art = run_experiment(RunConfig(total_ops=total, **cfg_kw))
+        wall = time.perf_counter() - t0
+        r = art.result
+        point = {
+            "batch_size": cfg_kw["batch_size"],
+            "total_ops": total,
+            "events": r.events,
+            "messages": r.messages,
+            "events_per_sec": round(r.events_per_sec, 1),
+            "events_per_sec_total_wall": round(r.events / wall, 1),
+            "engine_wall_s": round(r.wall_s, 4),
+            "total_wall_s": round(wall, 4),
+            "heap_peak": r.heap_peak,
+            "collapsed_events": art.sim.stats_collapsed,
+            "committed_ops": r.committed_ops,
+            "throughput_tx_s": round(r.throughput_tx_s, 1),
+            "fast_path_frac": round(r.fast_path_frac, 4),
+        }
+        if best is None or (point["events_per_sec_total_wall"]
+                            > best["events_per_sec_total_wall"]):
+            best = point
+    return best
+
+
+def run_bench(out_dir, quick: bool = False) -> list[str]:
+    claims = Claims()
+    total = 10_000 if quick else 40_000
+    repeats = 2 if quick else 4
+
+    run_experiment(_reference_cfg(2_000))    # warm imports/allocator
+    probe = calibration_score()
+    scale = probe / BASELINE_PROBE_SCORE
+    best = _measure(REFERENCE, total, repeats)
+    secondary = _measure(SECONDARY, total // 4, repeats)
+
+    # determinism spot-check rides along: two fresh runs, same seed
+    sig_a = _trace_sig(run_experiment(_reference_cfg(2_000)))
+    sig_b = _trace_sig(run_experiment(_reference_cfg(2_000)))
+
+    evs = best["events_per_sec_total_wall"]
+    speedup = evs / (BASELINE_EVENTS_PER_SEC * scale)
+    evs2 = secondary["events_per_sec_total_wall"]
+    speedup2 = evs2 / (SECONDARY_BASELINE_EVENTS_PER_SEC * scale)
+    headline = (f"engine >= {SPEEDUP_TARGET:.0f}x pre-PR events/sec on "
+                f"the 9-replica reference scenario")
+    detail = (f"{evs:,.0f} ev/s vs machine-scaled baseline "
+              f"{BASELINE_EVENTS_PER_SEC * scale:,.0f} "
+              f"({speedup:.2f}x; probe scale {scale:.2f})")
+    if quick:
+        # CI/laptop hardware differs from the machine the baseline was
+        # recorded on: report, don't fail
+        claims.note(headline + " [quick: informational]", detail)
+    else:
+        claims.check(headline, speedup >= SPEEDUP_TARGET, detail)
+    claims.note("secondary point: batch=10 paper-default configuration",
+                f"{evs2:,.0f} ev/s vs machine-scaled baseline "
+                f"{SECONDARY_BASELINE_EVENTS_PER_SEC * scale:,.0f} "
+                f"({speedup2:.2f}x)")
+    claims.check("same-seed determinism (committed trace + makespan)",
+                 sig_a == sig_b, f"sig={sig_a[:2]}")
+    claims.check("all reference ops committed",
+                 best["committed_ops"] == total,
+                 f"{best['committed_ops']}/{total}")
+
+    write_json(out_dir, "BENCH_engine", {
+        "bench": "engine",
+        "scenario": {**REFERENCE, "total_ops": total},
+        "quick": quick,
+        "repeats": repeats,
+        "best": best,
+        "secondary": secondary,
+        "baseline_events_per_sec": BASELINE_EVENTS_PER_SEC,
+        "secondary_baseline_events_per_sec":
+            SECONDARY_BASELINE_EVENTS_PER_SEC,
+        "calibration": {"probe_score": round(probe, 1),
+                        "baseline_probe_score": BASELINE_PROBE_SCORE,
+                        "scale": round(scale, 4)},
+        "speedup_vs_baseline": round(speedup, 3),
+        "secondary_speedup_vs_baseline": round(speedup2, 3),
+        "claims": claims.lines,
+    })
+    return claims.lines
+
+
+# benchmarks/run.py invokes ``mod.run(out_dir, quick=...)`` on every suite
+run = run_bench  # noqa: F811 — intentional module-entrypoint alias

@@ -13,13 +13,17 @@ from benchmarks.common import Claims, write_csv
 from repro.coord.grad_quorum import GradQuorum
 
 
-def run(out_dir) -> list[str]:
+def run(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
-    rows = []
-    for n, profile in [
+    trials = 300 if quick else 1500
+    profiles = [
         (16, "uniform"), (16, "one_slow"), (64, "one_slow"),
         (64, "tail_10pct"), (256, "tail_10pct"), (1024, "tail_10pct"),
-    ]:
+    ]
+    if quick:
+        profiles = profiles[:4]
+    rows = []
+    for n, profile in profiles:
         base = np.ones(n)
         if profile == "one_slow":
             base[-1] = 3.0
@@ -29,7 +33,7 @@ def run(out_dir) -> list[str]:
         for _ in range(20):                      # warm the latency EMA
             gq.observe(base * (0.9 + 0.2 * np.random.default_rng(0)
                                .random(n)))
-        stats = gq.expected_step_time(base, trials=1500)
+        stats = gq.expected_step_time(base, trials=trials)
         mask = gq.commit_mask()
         w = gq.state.weights()
         wfrac = float(w[mask].sum() / w.sum())

@@ -35,11 +35,14 @@ def _python_loop(arrivals, weights):
     return np.array(out)
 
 
-def run(out_dir) -> list[str]:
+def run(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
     rng = np.random.default_rng(0)
     rows = []
-    for ops, n in [(1024, 8), (8192, 8), (8192, 32), (65536, 16)]:
+    shapes = [(1024, 8), (8192, 8), (8192, 32), (65536, 16)]
+    if quick:
+        shapes = shapes[:2]
+    for ops, n in shapes:
         arrivals = rng.uniform(0, 10, (ops, n)).astype(np.float32)
         weights = rng.uniform(0.5, 8.0, (ops, n)).astype(np.float32)
 

@@ -11,12 +11,13 @@ from benchmarks.common import Claims, run_point, write_csv
 SERVERS = [3, 5, 7, 9]
 
 
-def run(out_dir) -> list[str]:
+def run(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
+    total = 6_000 if quick else 20_000
     rows, by = [], {}
     for ns in SERVERS:
         for proto in ("woc", "cabinet"):
-            r = run_point(protocol=proto, batch_size=10, total_ops=20_000,
+            r = run_point(protocol=proto, batch_size=10, total_ops=total,
                           n_replicas=ns, t_fail=2)
             rows.append(r)
             by[(proto, ns)] = r["tx_s"]

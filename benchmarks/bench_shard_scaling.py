@@ -44,19 +44,20 @@ def _point(**kw) -> dict:
             "messages": r.messages}
 
 
-def run_bench(out_dir) -> list[str]:
+def run_bench(out_dir, quick: bool = False) -> list[str]:
     claims = Claims()
+    base_ops = 4_000 if quick else BASE_OPS
     rows = []
 
     # -- uniform-locality group sweep --------------------------------------
     by_g = {}
     for g in GROUPS:
-        r = _point(n_groups=g, total_ops=BASE_OPS * g, batch_size=10,
+        r = _point(n_groups=g, total_ops=base_ops * g, batch_size=10,
                    locality="uniform", seed=3)
         rows.append(r)
         by_g[g] = r["tx_s"]
 
-    flat = run_flat(RunConfig(protocol="woc", total_ops=BASE_OPS,
+    flat = run_flat(RunConfig(protocol="woc", total_ops=base_ops,
                               batch_size=10, seed=3)).result
     claims.check("Shard G=1 == unsharded committed ops (same seed)",
                  by_g and rows[0]["ops"] == flat.committed_ops,
@@ -72,7 +73,7 @@ def run_bench(out_dir) -> list[str]:
     # -- graceful degradation: cross-group traffic sweep at G=4 -------------
     by_p = {}
     for p in P_LOCAL:
-        r = _point(n_groups=4, total_ops=BASE_OPS * 4, batch_size=10,
+        r = _point(n_groups=4, total_ops=base_ops * 4, batch_size=10,
                    locality="mixed", p_local=p, steal_threshold=0, seed=3)
         rows.append(r)
         by_p[p] = r["tx_s"]
@@ -86,10 +87,10 @@ def run_bench(out_dir) -> list[str]:
     # regime WPaxos targets, where serving a client from a remote region
     # caps its open-loop pipeline on RTT
     wan = CostModel(net_remote_client=6e-3)
-    steal = _point(n_groups=4, total_ops=BASE_OPS * 4, batch_size=10,
+    steal = _point(n_groups=4, total_ops=base_ops * 4, batch_size=10,
                    locality="drift", working_set=12, p_working=0.85,
                    drift_every=300, steal_threshold=3, seed=7, costs=wan)
-    frozen = _point(n_groups=4, total_ops=BASE_OPS * 4, batch_size=10,
+    frozen = _point(n_groups=4, total_ops=base_ops * 4, batch_size=10,
                     locality="drift", working_set=12, p_working=0.85,
                     drift_every=300, steal_threshold=0, seed=7, costs=wan)
     rows += [steal, frozen]

@@ -57,3 +57,10 @@ class Claims:
         mark = "PASS" if ok else "MISS"
         self.lines.append(f"[{mark}] {name}: {detail}")
         return ok
+
+    def note(self, name: str, detail: str):
+        """Informational line: recorded in reports/artifacts but never
+        fails the driver (used for machine-dependent comparisons in
+        --quick mode, where CI hardware differs from the machine the
+        baseline constant was measured on)."""
+        self.lines.append(f"[NOTE] {name}: {detail}")

@@ -1,6 +1,16 @@
 """Benchmark driver: one module per paper table/figure + beyond-paper
 benches. Writes CSVs to experiments/bench/ and prints a paper-claim
-validation summary. ``python -m benchmarks.run [--quick] [--only NAME]``"""
+validation summary. ``python -m benchmarks.run [--quick] [--only NAME]``
+
+``--quick`` threads a reduced-size mode through every suite (smaller
+sweeps, fewer ops/batches/trials) so CI smoke steps and laptops can run
+the full driver in minutes instead of hours. Quick mode trades
+claim-validation fidelity for speed: the reduced runs sit in noisier
+queueing regimes, so treat quick-mode [MISS] lines as a prompt to re-run
+the full suite, not as a regression verdict. The ``engine`` suite is the
+exception — its claims are sized to hold in quick mode (CI runs
+``--quick --only engine``).
+"""
 
 from __future__ import annotations
 
@@ -9,11 +19,13 @@ import sys
 import time
 
 from benchmarks import (bench_batch_size, bench_client_scaling,
-                        bench_conflict_rate, bench_grad_quorum,
-                        bench_quorum_kernel, bench_server_scaling,
-                        bench_shard_scaling, bench_weights)
+                        bench_conflict_rate, bench_engine,
+                        bench_grad_quorum, bench_quorum_kernel,
+                        bench_server_scaling, bench_shard_scaling,
+                        bench_weights)
 
 SUITES = [
+    ("engine", bench_engine),
     ("weights_tables", bench_weights),
     ("quorum_kernel", bench_quorum_kernel),
     ("grad_quorum", bench_grad_quorum),
@@ -29,6 +41,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/bench")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced batches/clients/sweeps in every suite "
+                         "(CI smoke / laptop mode)")
     args = ap.parse_args()
 
     all_lines = []
@@ -38,7 +53,7 @@ def main() -> int:
             continue
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
-        lines = mod.run(args.out)
+        lines = mod.run(args.out, quick=args.quick)
         for ln in lines:
             print("  " + ln, flush=True)
         print(f"  ({time.time()-t0:.0f}s)", flush=True)

@@ -55,6 +55,9 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
         self._slow_pending_remove(op)
         self.finalize_op(op, now, path)
 
+    def on_applied_batch(self, ops, now: float, path: str) -> None:
+        self._finalize_batch(ops, now, path)
+
     def finalize_op(self, op: Op, now: float, path: str) -> None:
         bid = self.op2batch.pop(op.op_id, None)
         if bid is None:

@@ -45,17 +45,21 @@ from repro.core.simulator import Msg, Op
 OBSERVE_CAP = 64   # per-reply cap on per-object latency EMA updates
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False, slots=True)
 class FastBatch:
     batch_id: int
     ops: List[Op]
     weights: np.ndarray      # (B, n) per-op object weights
-    threshold: np.ndarray    # (B,)
+    threshold: float         # scalar: weight rows are permutations of the
+                             # same base vector, so every op's T^O is equal
     acc: np.ndarray          # (B,) accumulated weight
     resolved: np.ndarray     # (B,) bool: committed or diverted
     propose_time: float
     leader: int              # leader id at propose time (must co-sign)
     leader_voted: bool
+    n_resolved: int = 0      # fast "nothing resolved yet" check
+    timer: object = None     # fast_timeout handle (cancelled on resolve)
+    observe: List[Op] = dataclasses.field(default_factory=list)
     deps: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
     replied: set = dataclasses.field(default_factory=set)
 
@@ -74,40 +78,44 @@ class FastPathMixin:
         """Propose a batch of fast-path ops (Alg. 1 lines 4-7)."""
         if not ops:
             return
-        c = self.sim.costs
         # per-op coordination cost (ordering, bookkeeping, quorum math);
         # this is the CPU the paper says saturates replicas (§5.4)
-        self.sim.busy(self.node_id, c.c_coord * len(ops)
-                      * c.speed(self.node_id))
-        n = self.sim.n
+        self.sim.busy(self.node_id, self._coord_cost * len(ops))
         B = len(ops)
-        wmat = np.empty((B, n))
-        for i, op in enumerate(ops):
-            wmat[i] = self.obj_weights.weights_for(op.obj)
-        thresh = wmat.sum(axis=1) / 2.0
+        table = self.obj_weights
+        weights_for = table.weights_for
+        # one C-level stack beats B numpy row assignments; rows are mostly
+        # the same cached node-level vector object
+        wmat = np.array([weights_for(op.obj) for op in ops])
         leader = self.current_leader(now)
         fb = FastBatch(
             batch_id=next(self._fb_seq) | (self.node_id << 48),
-            ops=ops, weights=wmat, threshold=thresh,
+            ops=ops, weights=wmat, threshold=table.half_sum,
             acc=wmat[:, self.node_id].copy(),        # self-vote (line 4)
             resolved=np.zeros(B, dtype=bool), propose_time=now,
             leader=leader, leader_voted=(leader == self.node_id))
         if fb.leader_voted:
+            last_applied = self.last_applied
             for op in ops:
                 # order after the object's last applied op on EITHER path
                 # (slow predecessors per Thm 2, and the previous fast
                 # commit — see last_applied in BaseReplica)
-                dep = self.last_applied.get(op.obj)
+                dep = last_applied.get(op.obj)
                 if dep is not None:
                     fb.deps[op.op_id] = [dep]
+        # per-object latency EMA targets: only objects with a repeat-access
+        # record (COMMON/HOT candidates — where object weights matter);
+        # resolved once here instead of on every accept reply
+        om_stats = self.om.stats
+        fb.observe = [op for op in itertools.islice(ops, OBSERVE_CAP)
+                      if type(om_stats.get(op.obj)) is not int]
         self.fast_batches[fb.batch_id] = fb
-        others = [r for r in range(n) if r != self.node_id]
-        self.broadcast(others, "fast_propose",
+        self.broadcast(self._others, "fast_propose",
                        {"fb": fb.batch_id, "ops": ops}, size_ops=B)
         # timeout scales with batch size: large batches legitimately spend
         # longer in per-op parse/apply queues before replies return
-        self.set_timer(self.sim.costs.timeout + 50e-6 * B, "fast_timeout",
-                       {"fb": fb.batch_id})
+        fb.timer = self.set_timer(self.sim.costs.timeout + 50e-6 * B,
+                                  "fast_timeout", {"fb": fb.batch_id})
         # single-replica degenerate case: self-vote may already commit
         self._fast_check_commit(fb, now)
 
@@ -115,54 +123,85 @@ class FastPathMixin:
         fb = self.fast_batches.get(msg.payload["fb"])
         if fb is None or msg.src in fb.replied:
             return
-        fb.replied.add(msg.src)
-        mask = msg.payload["mask"]                  # True = FAST_ACCEPT
-        live = ~fb.resolved
-        fb.acc[live & mask] += fb.weights[live & mask, msg.src]
-        if msg.src == fb.leader:
+        src = msg.src
+        fb.replied.add(src)
+        bits: int = msg.payload["mask"]             # bit i = FAST_ACCEPT
+        B = len(fb.ops)
+        conflicted = None
+        if bits == (1 << B) - 1 and not fb.n_resolved:
+            # all-accept on a fully-live batch (the overwhelmingly common
+            # reply): one unmasked vector add, no boolean temporaries
+            fb.acc += fb.weights[:, src]
+        else:
+            mask = np.zeros(B, dtype=bool)
+            for i in range(B):
+                if (bits >> i) & 1:
+                    mask[i] = True
+            live = ~fb.resolved
+            accept = live & mask
+            fb.acc[accept] += fb.weights[accept, src]
+            conflicted = live & ~mask
+        if src == fb.leader:
             fb.leader_voted = True
             for i, dep in msg.payload.get("deps", {}).items():
                 fb.deps[fb.ops[i].op_id] = [dep]
-        # latency observations feed the dynamic weight rule (§3.1)
+        # latency observations feed the dynamic weight rule (§3.1);
+        # fb.observe pre-selects the repeat-access objects worth tracking
         lat = now - fb.propose_time
-        self.observe_node(msg.src, lat)
-        for op in fb.ops[:OBSERVE_CAP]:
-            self.obj_weights.observe(op.obj, msg.src, lat)
+        self.observe_node(src, lat)
+        if fb.observe:
+            observe = self.obj_weights.observe
+            for op in fb.observe:
+                observe(op.obj, src, lat)
         # first CONFLICT for an op -> slow path (Alg. 1 lines 14-15)
-        conflicted = live & ~mask
-        if conflicted.any():
+        if conflicted is not None and conflicted.any():
             self._divert(fb, conflicted, now)
         self._fast_check_commit(fb, now)
 
     def _fast_check_commit(self, fb: FastBatch, now: float) -> None:
         if not fb.leader_voted:          # leader co-sign is mandatory
             return
-        ready = (~fb.resolved) & (fb.acc > fb.threshold)   # strict crossing
+        ready = fb.acc > fb.threshold                      # strict crossing
+        if fb.n_resolved:
+            ready &= ~fb.resolved
         if not ready.any():
-            self._fast_gc(fb)
             return
-        fb.resolved |= ready
-        committed = [fb.ops[i] for i in np.flatnonzero(ready)]
-        deps = {op.op_id: fb.deps.get(op.op_id, []) for op in committed}
+        if not fb.n_resolved and ready.all():
+            committed = fb.ops                 # whole batch commits at once
+            fb.resolved[:] = True
+        else:
+            committed = [fb.ops[i] for i in np.flatnonzero(ready)]
+            fb.resolved |= ready
+        fb.n_resolved += len(committed)
+        if fb.deps:
+            deps = {op.op_id: fb.deps.get(op.op_id, []) for op in committed}
+        else:
+            deps = {}
         for op in committed:
             op.path = op.path or "fast"
-            self.apply_commit(op, now, "fast", deps[op.op_id])
-        others = [r for r in range(self.sim.n) if r != self.node_id]
-        self.broadcast(others, "fast_commit",
+        self.apply_commit_batch(committed, deps, now, "fast")
+        self.broadcast(self._others, "fast_commit",
                        {"ops": committed, "deps": deps},
                        size_ops=len(committed))
         self.flush_credits()
         self._fast_gc(fb)
 
     def _divert(self, fb: FastBatch, which: np.ndarray, now: float) -> None:
+        which &= ~fb.resolved
+        n = int(which.sum())
+        if not n:
+            return
         fb.resolved |= which
+        fb.n_resolved += n
         ops = [fb.ops[i] for i in np.flatnonzero(which)]
         self.forward_slow(ops, now)
         self._fast_gc(fb)
 
     def _fast_gc(self, fb: FastBatch) -> None:
-        if fb.resolved.all():
+        if fb.n_resolved >= len(fb.ops):
             self.fast_batches.pop(fb.batch_id, None)
+            if fb.timer is not None:
+                fb.timer.cancel()
 
     def on_fast_timeout(self, payload: dict, now: float) -> None:
         fb = self.fast_batches.get(payload["fb"])
@@ -175,29 +214,60 @@ class FastPathMixin:
     # -- replica side -----------------------------------------------------------
 
     def on_fast_propose(self, msg: Msg, now: float) -> None:
+        """Reply with an accept BITMASK (bit i = FAST_ACCEPT for op i):
+        ints are free to build and let the coordinator detect the
+        all-accept reply with one compare. The conflict check + in-flight
+        registration (has_conflict/register_inflight semantics, incl.
+        lazy expiry of stale entries) is inlined — it runs B x (n-1)
+        times per client batch."""
         ops: List[Op] = msg.payload["ops"]
-        mask = np.zeros(len(ops), dtype=bool)
+        bits = 0
         deps: Dict[int, int] = {}
         am_leader = self.is_leader(now)
+        slow_count = self._slow_obj_count
+        last_applied = self.last_applied
+        in_flight = self.in_flight
+        cutoff = now - self.gc_timeout
         for i, op in enumerate(ops):
-            conflict = self.has_conflict(op.obj, op.op_id, now)
-            if am_leader and self._slow_obj_count.get(op.obj):
+            obj = op.obj
+            op_id = op.op_id
+            d = in_flight.get(obj)
+            conflict = False
+            if d is not None:
+                expired = None
+                for k, t0 in d.items():
+                    if t0 < cutoff:
+                        if expired is None:
+                            expired = [k]
+                        else:
+                            expired.append(k)
+                    elif k != op_id:
+                        conflict = True
+                if expired:
+                    for k in expired:
+                        del d[k]
+                    if not d:
+                        del in_flight[obj]
+                        d = None
+            if am_leader and not conflict and slow_count \
+                    and slow_count.get(obj):
                 conflict = True        # a slow op is queued for this object
             if not conflict:
-                mask[i] = True
-                self.register_inflight(op.obj, op.op_id, now)
+                bits |= 1 << i
+                if d is None:
+                    in_flight[obj] = {op_id: now}
+                else:
+                    d[op_id] = now
                 if am_leader:
-                    dep = self.last_applied.get(op.obj)
+                    dep = last_applied.get(obj)
                     if dep is not None:
                         deps[i] = dep
-        payload = {"fb": msg.payload["fb"], "mask": mask}
+        payload = {"fb": msg.payload["fb"], "mask": bits}
         if am_leader:
             payload["deps"] = deps
         self.send(msg.src, "fast_accept", payload)
 
     def on_fast_commit(self, msg: Msg, now: float) -> None:
-        ops: List[Op] = msg.payload["ops"]
-        deps = msg.payload.get("deps", {})
-        for op in ops:
-            self.apply_commit(op, now, "fast", deps.get(op.op_id))
+        self.apply_commit_batch(msg.payload["ops"],
+                                msg.payload.get("deps") or {}, now, "fast")
         self.flush_credits()

@@ -35,7 +35,7 @@ class Route(enum.Enum):
     SLOW = "slow"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False, slots=True)
 class ObjectStats:
     """Continuously-updated per-object access statistics (paper §3.3)."""
 
@@ -50,14 +50,9 @@ class ObjectStats:
         return self.conflicts / self.ops if self.ops else 0.0
 
 
-@dataclasses.dataclass
-class InFlight:
-    """One in-flight operation on an object."""
-
-    op_id: int
-    client: int
-    coordinator: int
-    started: float
+# In-flight records are plain ``op_id -> registered_time`` floats (the
+# only field any consumer ever read was the start time; a record object
+# per operation was pure allocator churn on the route hot path).
 
 
 class ObjectManager:
@@ -75,8 +70,13 @@ class ObjectManager:
     def __init__(self, *, hot_conflict_rate: float = 0.25,
                  hot_concurrency: int = 3, demote_after_ops: int = 8,
                  latency_decay: float = 0.9, post_migration_slow: int = 1):
-        self.stats: Dict[int, ObjectStats] = {}
-        self.in_flight: Dict[int, Dict[int, InFlight]] = {}  # obj -> op_id -> rec
+        # stats value is either a full ObjectStats record, or — for the
+        # overwhelmingly common case of an object seen exactly once (a
+        # private single-writer namespace draw) — a compact int marker
+        # holding the sole accessing client id; the record materializes
+        # on the second access (see route()).
+        self.stats: Dict[int, object] = {}
+        self.in_flight: Dict[int, Dict[int, float]] = {}  # obj -> op_id -> t0
         self.classes: Dict[int, ObjectClass] = {}
         self.hot_conflict_rate = hot_conflict_rate
         self.hot_concurrency = hot_concurrency
@@ -149,21 +149,45 @@ class ObjectManager:
         Fast path iff the object is classified INDEPENDENT *and* has no
         conflicting in-flight operation (Theorem 2's cross-path guard).
         """
-        st = self.stats.setdefault(obj, ObjectStats())
-        inflight = self.in_flight.setdefault(obj, {})
+        st = self.stats.get(obj)
+        inflight = self.in_flight.get(obj)
         conflicted = bool(inflight)
+        if st is None and not conflicted and not self._fresh:
+            # first-ever access on a quiet object (private single-writer
+            # namespaces dominate every workload mix): trivially
+            # INDEPENDENT and fast-path eligible. Record only the compact
+            # client marker; full stats materialize on a second access.
+            self.stats[obj] = client
+            if inflight is None:
+                self.in_flight[obj] = {op_id: now}
+            else:
+                inflight[op_id] = now
+            self._clean_streak[obj] = 1
+            return Route.FAST
+        if st is None:
+            st = self.stats[obj] = ObjectStats()
+        elif type(st) is int:
+            # upgrade the first-access marker (ops=1, that one client,
+            # no conflicts, peak 1 — exactly what the full path would
+            # have recorded)
+            st = ObjectStats(ops=1, distinct_clients={st},
+                             concurrent_peak=1)
+            self.stats[obj] = st
+        if inflight is None:
+            inflight = self.in_flight[obj] = {}
 
         st.ops += 1
         st.distinct_clients.add(client)
         st.last_access = now
-        st.concurrent_peak = max(st.concurrent_peak, len(inflight) + 1)
+        if len(inflight) >= st.concurrent_peak:
+            st.concurrent_peak = len(inflight) + 1
         if conflicted:
             st.conflicts += 1
             self._clean_streak[obj] = 0
         else:
             self._clean_streak[obj] = self._clean_streak.get(obj, 0) + 1
 
-        inflight[op_id] = InFlight(op_id, client, coordinator, now)
+        inflight[op_id] = now
         self._reclassify(obj)
 
         fresh = self._fresh.get(obj, 0)
@@ -186,18 +210,24 @@ class ObjectManager:
 
     def complete(self, obj: int, op_id: int, now: float) -> None:
         """Commit/abort notification: remove from in-flight, fold latency."""
-        rec = self.in_flight.get(obj, {}).pop(op_id, None)
-        if rec is not None:
-            st = self.stats[obj]
-            lat = now - rec.started
-            d = self.latency_decay
-            st.latency_ema_ms = (d * st.latency_ema_ms + (1 - d) * lat
-                                 if st.ops > 1 else lat)
+        d = self.in_flight.get(obj)
+        started = d.pop(op_id, None) if d else None
+        if started is not None:
+            st = self.stats.get(obj)
+            if type(st) is ObjectStats:   # compact markers carry no EMA
+                lat = now - started
+                d = self.latency_decay
+                st.latency_ema_ms = (d * st.latency_ema_ms + (1 - d) * lat
+                                     if st.ops > 1 else lat)
 
     # -- introspection ------------------------------------------------------
 
     def snapshot(self) -> Dict[int, ObjectClass]:
-        return dict(self.classes)
+        # compact first-access markers are INDEPENDENT by construction
+        out = {obj: ObjectClass.INDEPENDENT
+               for obj, st in self.stats.items() if type(st) is int}
+        out.update(self.classes)
+        return out
 
     def inflight_count(self) -> int:
         return sum(len(v) for v in self.in_flight.values())

@@ -27,32 +27,59 @@ from repro.core.simulator import Msg, Node, Simulation
 
 
 class ObjectWeightTable:
-    """Per-object latency EMA -> geometric weights (numpy, event-loop fast)."""
+    """Per-object latency EMA -> geometric weights (numpy, event-loop fast).
+
+    The returned weight vectors are permutations of ``base`` and treated as
+    read-only by callers, so the node-level fallback (the common case: a
+    first-touch object has no EMA of its own) is cached and recomputed only
+    when the node EMA changes (``node_version`` is bumped by
+    ``BaseReplica.observe_node``).
+    """
 
     def __init__(self, n: int, r: float, node_ema: np.ndarray,
                  decay: float = 0.85):
         self.n = n
         self.base = np.asarray(W.geometric_weights(n, r))  # descending by rank
+        self.half_sum = float(self.base.sum()) / 2.0
         self.decay = decay
-        self.ema: Dict[int, np.ndarray] = {}
+        # per-object EMAs are plain float lists: element updates in
+        # ``observe`` are ~5x cheaper than numpy scalar writes, and the
+        # argsort in ``_weights_of`` converts on the (much rarer) read
+        self.ema: Dict[int, list] = {}
         self.node_ema = node_ema  # shared fallback: node-level latency EMA
+        self.node_version = 0
+        self._nw_version = -1
+        self._nw: np.ndarray | None = None
+        self._ranks = np.empty(n, dtype=np.int64)   # scratch
+        self._arange = np.arange(n)
 
     def observe(self, obj: int, replica: int, latency: float) -> None:
         e = self.ema.get(obj)
         if e is None:
-            e = self.node_ema.copy()
-            self.ema[obj] = e
+            e = self.ema[obj] = self.node_ema.tolist()
         e[replica] = self.decay * e[replica] + (1 - self.decay) * latency
 
-    def weights_for(self, obj: int) -> np.ndarray:
-        e = self.ema.get(obj, self.node_ema)
+    def _weights_of(self, e: np.ndarray) -> np.ndarray:
         order = np.argsort(e, kind="stable")      # fastest first
-        ranks = np.empty(self.n, dtype=np.int64)
-        ranks[order] = np.arange(self.n)
+        ranks = self._ranks
+        ranks[order] = self._arange
         return self.base[ranks]
 
+    def node_weights(self) -> np.ndarray:
+        """Node-level fallback weights, cached per node-EMA version."""
+        if self._nw_version != self.node_version:
+            self._nw = self._weights_of(self.node_ema)
+            self._nw_version = self.node_version
+        return self._nw
+
+    def weights_for(self, obj: int) -> np.ndarray:
+        e = self.ema.get(obj)
+        if e is None:
+            return self.node_weights()
+        return self._weights_of(e)
+
     def threshold_for(self, obj: int) -> float:
-        return float(self.base.sum()) / 2.0        # T^O = sum(W^O)/2
+        return self.half_sum                       # T^O = sum(W^O)/2
 
 
 class BaseReplica(Node):
@@ -81,14 +108,24 @@ class BaseReplica(Node):
         self.node_ema = np.array(
             [10e-3 * (1 + 0.01 * i) for i in range(n)], dtype=np.float64)
         self.node_ema[node_id] = 0.0
-        self.node_base = np.asarray(W.geometric_weights(n, self.r))
         self.obj_weights = ObjectWeightTable(n, self.r, self.node_ema)
+        # hot-path precomputes: this replica's speed-scaled per-op costs
+        # and its broadcast peer list (both constants for the run)
+        sp = sim.costs.speed(node_id)
+        self._coord_cost = sim.costs.c_coord * sp
+        self._apply_cost = sim.costs.c_apply * sp
+        self._others = [r for r in range(n) if r != node_id]
         # in-flight conflict map with lazy GC
         self.in_flight: Dict[int, Dict[int, float]] = {}
         self.gc_timeout = sim.costs.timeout * 4
         # failure detector
-        self.last_hb = {i: 0.0 for i in range(n)}
+        self.last_hb = [0.0] * n
         self._hb_armed = False
+        # leadership memo: (leader, valid_until). Invalidated by any event
+        # that could surface a better (lower-rank) leader: a heartbeat
+        # from a smaller id, recovery transitions, self-candidacy opening.
+        self._leader_memo = -1
+        self._leader_until = -1.0
         # per-(client,batch) commit credits, coalesced per commit handler
         self._credit_buf: Dict[tuple, int] = {}
         # dependency-ordered apply: obj -> FIFO of (op, deps, path) waiting
@@ -115,22 +152,27 @@ class BaseReplica(Node):
     # -- weights -------------------------------------------------------------
 
     def node_weights(self) -> np.ndarray:
-        order = np.argsort(self.node_ema, kind="stable")
-        ranks = np.empty(self.sim.n, dtype=np.int64)
-        ranks[order] = np.arange(self.sim.n)
-        return self.node_base[ranks]
+        # node and object weights share one geometric base (same n, same
+        # steepness): the table's version-cached node-level ranking IS the
+        # node weighting, and half_sum is T^N = sum(W^N)/2
+        return self.obj_weights.node_weights()
 
     def node_threshold(self) -> float:
-        return float(self.node_base.sum()) / 2.0
+        return self.obj_weights.half_sum
 
     def observe_node(self, replica: int, latency: float, decay=0.85) -> None:
         self.node_ema[replica] = (decay * self.node_ema[replica]
                                   + (1 - decay) * latency)
+        self.obj_weights.node_version += 1
 
     # -- in-flight map (Theorem 2 machinery) ----------------------------------
 
     def register_inflight(self, obj: int, op_id: int, now: float) -> None:
-        self.in_flight.setdefault(obj, {})[op_id] = now
+        d = self.in_flight.get(obj)
+        if d is None:
+            self.in_flight[obj] = {op_id: now}
+        else:
+            d[op_id] = now
 
     def clear_inflight(self, obj: int, op_id: int) -> None:
         d = self.in_flight.get(obj)
@@ -144,12 +186,20 @@ class BaseReplica(Node):
         d = self.in_flight.get(obj)
         if not d:
             return False
-        expired = [k for k, t0 in d.items() if now - t0 > self.gc_timeout]
-        for k in expired:
-            del d[k]
-        if not d:
-            self.in_flight.pop(obj, None)
-            return False
+        cutoff = now - self.gc_timeout
+        expired = None
+        for k, t0 in d.items():
+            if t0 < cutoff:
+                if expired is None:
+                    expired = [k]
+                else:
+                    expired.append(k)
+        if expired:
+            for k in expired:
+                del d[k]
+            if not d:
+                self.in_flight.pop(obj, None)
+                return False
         return any(k != op_id for k in d)
 
     # -- leader election -------------------------------------------------------
@@ -167,13 +217,35 @@ class BaseReplica(Node):
         return list(np.argsort(self.node_ema, kind="stable"))
 
     def current_leader(self, now: float) -> int:
+        if now <= self._leader_until:
+            return self._leader_memo
         candidate = not self.recovering and now >= self._lead_after
+        me = self.node_id
+        last_hb = self.last_hb
+        hb_to = self.HB_TIMEOUT
         for r in range(self.sim.n):
-            if r == self.node_id and candidate:
+            if r == me:
+                if candidate:
+                    # smaller ids are all dead; only a heartbeat from one
+                    # of them changes this (invalidated in on_heartbeat)
+                    self._leader_memo = r
+                    self._leader_until = float("inf")
+                    return r
+                continue
+            if now - last_hb[r] <= hb_to:
+                # valid until this leader's detector window lapses, or we
+                # become a candidate ourselves at _lead_after (only
+                # relevant when r > me), or a smaller id heartbeats
+                until = last_hb[r] + hb_to
+                if r > me and self._lead_after > now:
+                    until = min(until, self._lead_after)
+                self._leader_memo = r
+                self._leader_until = until
                 return r
-            if r != self.node_id and now - self.last_hb[r] <= self.HB_TIMEOUT:
-                return r
-        return self.node_id if candidate else (self.node_id + 1) % self.sim.n
+        return me if candidate else (me + 1) % self.sim.n
+
+    def _leader_invalidate(self) -> None:
+        self._leader_until = -1.0
 
     def is_leader(self, now: float) -> bool:
         return self.current_leader(now) == self.node_id
@@ -188,6 +260,8 @@ class BaseReplica(Node):
 
     def on_heartbeat(self, msg: Msg, now: float) -> None:
         self.last_hb[msg.src] = now
+        if msg.src < self._leader_memo:
+            self._leader_until = -1.0    # a better leader may be back
 
     # -- crash recovery: state transfer before rejoining --------------------------
     #
@@ -199,6 +273,7 @@ class BaseReplica(Node):
 
     def on_recover(self, now: float) -> None:
         self.recovering = True
+        self._leader_invalidate()
         self._recovery_buf = []
         self.in_flight.clear()
         self._obj_buffer.clear()
@@ -247,14 +322,10 @@ class BaseReplica(Node):
         if not self.recovering:
             return
         p = msg.payload
-        self.rsm.store = dict(p["store"])
-        self.rsm.applied.clear()
-        self.rsm.applied.update({k: list(v) for k, v in p["applied"].items()})
-        self.rsm.applied_ops = set(p["applied_ops"])
-        self.rsm.obj_ops.clear()
-        self.rsm.obj_ops.update({k: list(v)
-                                 for k, v in p.get("obj_ops", {}).items()})
-        self.rsm.apply_count = p["apply_count"]
+        self.rsm.install_snapshot(
+            store=p["store"], applied=p["applied"],
+            applied_ops=p["applied_ops"], obj_ops=p.get("obj_ops", {}),
+            apply_count=p["apply_count"])
         self.last_slow = dict(p["last_slow"])
         self.last_applied = dict(p.get("last_applied", {}))
         self._obj_buffer = {k: list(v) for k, v in p["obj_buffer"].items()}
@@ -273,6 +344,7 @@ class BaseReplica(Node):
         # different orders at different replicas — observed in the
         # crash+recover KV-store example before this guard)
         self._lead_after = now + self.HB_TIMEOUT * 1.2
+        self._leader_invalidate()
         self.set_timer(self.HB_TIMEOUT * 1.2, "rejoin")
 
     def on_rejoin(self, now: float) -> None:
@@ -297,9 +369,18 @@ class BaseReplica(Node):
             # no usable local state yet: buffer until the snapshot installs
             self._recovery_buf.append((op, deps, path))
             return
-        deps = [d for d in (deps or []) if d not in self.rsm.applied_ops
-                and d != op.op_id]
+        applied_ops = self.rsm.applied_ops
+        if deps:
+            deps = [d for d in deps if d not in applied_ops
+                    and d != op.op_id]
         buf = self._obj_buffer.get(op.obj)
+        if not deps and buf is None:
+            # hot path: no unsatisfied dependencies, nothing buffered on
+            # this object — apply immediately, nothing to drain
+            if op.op_id not in applied_ops:
+                self._apply_now(op, now, path)
+            return
+        deps = deps or []
         if not deps and buf and any(op.op_id in (bdeps or ())
                                     for _, bdeps, _ in buf):
             # a buffered commit is explicitly waiting on THIS op (e.g. the
@@ -332,9 +413,74 @@ class BaseReplica(Node):
         # NOTE: no flush_credits here — callers flush once per handler so
         # per-batch credits coalesce into one client_reply message
 
+    def apply_commit_batch(self, ops, deps: Dict[int, List[int]],
+                           now: float, path: str) -> None:
+        """Apply a batch of committed ops in order — semantically identical
+        to calling :meth:`apply_commit` per op, but with the common case
+        (no dependency edges, no per-object FIFO pending) inlined and the
+        per-op CPU charge coalesced into one ``busy`` call. This is the
+        hot path of every fast_commit / slow_commit handler: committed_ops
+        x n_replicas executions per run."""
+        if self.recovering:
+            for op in ops:
+                self.apply_commit(op, now, path, deps.get(op.op_id))
+            return
+        rsm = self.rsm
+        applied_ops = rsm.applied_ops
+        log = rsm._log
+        store = rsm.store
+        obj_buffer = self._obj_buffer
+        in_flight = self.in_flight
+        last_applied = self.last_applied
+        is_slow = path == "slow"
+        applied_now = []
+        for op in ops:
+            op_id = op.op_id
+            d = deps.get(op_id) if deps else None
+            if d or obj_buffer:
+                if d and not obj_buffer:
+                    # dependency edges are usually already satisfied (the
+                    # dep is the object's previously applied op): verify
+                    # inline and fall through to the fast path
+                    for x in d:
+                        if x not in applied_ops and x != op_id:
+                            break
+                    else:
+                        d = None
+                if d or obj_buffer:
+                    # unsatisfied dependency, or an object FIFO is pending
+                    # (an earlier op in this very batch may just have
+                    # buffered): take the full ordering path, which
+                    # charges its own CPU
+                    self.apply_commit(op, now, path, d)
+                    continue
+            if op_id in applied_ops:
+                continue
+            applied_now.append(op)
+            # RSM.apply, inlined (idempotence pre-checked above)
+            obj = op.obj
+            applied_ops.add(op_id)
+            if op.kind == "w":
+                store[obj] = op.value
+                log.append((obj, op_id, op.value))
+            else:
+                log.append((obj, op_id, None))
+                op.read_result = store.get(obj)
+            fl = in_flight.get(obj)
+            if fl is not None:
+                fl.pop(op_id, None)
+                if not fl:
+                    del in_flight[obj]
+            if is_slow:
+                self.last_slow[obj] = op_id
+            last_applied[obj] = op_id
+        if applied_now:
+            rsm.apply_count += len(applied_now)
+            self.sim.busy(self.node_id, self._apply_cost * len(applied_now))
+            self.on_applied_batch(applied_now, now, path)
+
     def _apply_now(self, op, now: float, path: str) -> None:
-        c = self.sim.costs
-        self.sim.busy(self.node_id, c.c_apply * c.speed(self.node_id))
+        self.sim.busy(self.node_id, self._apply_cost)
         self.rsm.apply(op)
         self.clear_inflight(op.obj, op.op_id)
         if path == "slow":
@@ -344,6 +490,13 @@ class BaseReplica(Node):
 
     def on_applied(self, op, now: float, path: str) -> None:
         """Hook for protocol-specific post-apply bookkeeping."""
+
+    def on_applied_batch(self, ops: List, now: float, path: str) -> None:
+        """Batch form of :meth:`on_applied` (called once per commit batch
+        from apply_commit_batch; subclasses with per-op bookkeeping
+        override this with a hoisted loop)."""
+        for op in ops:
+            self.on_applied(op, now, path)
 
     def _drain_obj(self, obj: int, now: float) -> None:
         buf = self._obj_buffer.get(obj)
@@ -398,7 +551,11 @@ class BaseReplica(Node):
 
     def credit_op(self, client: int, batch_id: int, op_id: int) -> None:
         key = (client, batch_id)
-        self._credit_buf.setdefault(key, []).append(op_id)
+        buf = self._credit_buf.get(key)
+        if buf is None:
+            self._credit_buf[key] = [op_id]
+        else:
+            buf.append(op_id)
 
     def flush_credits(self) -> None:
         if not self._credit_buf:

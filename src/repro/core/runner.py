@@ -91,7 +91,9 @@ def run(cfg: RunConfig) -> RunArtifacts:
 
     for c in clients:
         c.start()
-    sim.run(until=cfg.sim_time_cap, stop=lambda: all(c.done() for c in clients))
+    # clients bump sim.clients_done exactly once on completion, so the
+    # per-event stop check is a counter compare, not an all() scan
+    sim.run(until=cfg.sim_time_cap, stop_when_clients_done=len(clients))
 
     result = collect_metrics(cfg.protocol, sim, clients, cfg.batch_size,
                              t_start=0.0)

@@ -20,15 +20,39 @@ tracking); outgoing sends occupy the sender (fan-out is not free — this is
 what saturates Cabinet's leader). Everything is deterministic given the
 seed: simulations are exactly reproducible.
 
+Engine notes (PR 2 hot-path overhaul):
+
+  * **Jitter hash.** Per-message network jitter is drawn from a
+    splitmix64-style integer hash (:func:`hash_jitter_u01`) instead of the
+    original blake2b digest. The stream is equally well distributed for
+    this purpose but numerically *different*, so every jitter-sensitive
+    number (throughput/latency CSVs from earlier runs) was re-baselined
+    once in this PR. Same-seed bit-for-bit reproducibility and the
+    sharded-G=1 ≡ unsharded equivalence are contractual and covered by
+    tests/test_engine.py golden traces.
+  * **Event collapsing.** A message arrival normally schedules a separate
+    processing-completion event (``now`` stays strictly monotone while a
+    busy node drains its queue). When the destination is idle and no other
+    event is scheduled before processing would complete, the two events
+    are collapsed and the handler runs inline — same times, same order,
+    half the heap traffic.
+  * **Cancellable timers.** :meth:`Simulation.set_timer` returns a
+    :class:`TimerHandle`; cancelled timers die lazily when popped instead
+    of dispatching into node code (client retry timers are the big win).
+  * Per-node service state (busy-until, send/recv/parse costs, one-way
+    delay bases) lives in flat lists indexed by node id, not dicts, and
+    ``_link_last`` is pruned of inactive entries so long drift/migration
+    runs don't grow it without bound.
+
 Entity ids: replicas are ``0..n-1``; clients are ``n..n+m-1``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import hashlib
+import gc
 import heapq
-import itertools
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -74,18 +98,46 @@ class CostModel:
         return self.net_dist[replica % len(self.net_dist)]
 
 
-def _hash_uniform(*keys: int) -> float:
-    """Deterministic uniform [0,1) from integer keys (stable across runs)."""
-    h = hashlib.blake2b(np.array(keys, dtype=np.int64).tobytes(),
-                        digest_size=8).digest()
-    return int.from_bytes(h, "little") / 2**64
+# ---------------------------------------------------------------------------
+# Deterministic jitter hash (splitmix64-style; golden-pinned in tests)
+# ---------------------------------------------------------------------------
+
+_U64 = (1 << 64) - 1
+_INV_2_64 = 1.0 / 2.0 ** 64
+_SEED_MULT = 0xD1342543DE82EF95
+_SRC_MULT = 0x9E3779B97F4A7C15
+_DST_MULT = 0xC2B2AE3D27D4EB4F
+
+
+def _jitter(seed_term: int, src: int, dst: int, seq: int) -> float:
+    """Uniform [0,1) from a pre-multiplied seed term + message coordinates.
+
+    One linear combine + the splitmix64 finalizer: ~10x cheaper than the
+    blake2b digest it replaced, which was the single largest per-message
+    cost in the event loop.
+    """
+    x = (seed_term + src * _SRC_MULT + dst * _DST_MULT + seq) & _U64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _U64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _U64
+    return ((x ^ (x >> 31)) & _U64) * _INV_2_64
+
+
+def hash_jitter_u01(seed: int, src: int, dst: int, seq: int) -> float:
+    """Canonical per-message jitter sample in [0,1).
+
+    This is THE timing-critical hash: every network delay in the simulator
+    adds ``hash_jitter_u01(seed, src, dst, msg_seq) * net_jitter``.
+    tests/test_engine.py pins golden values so refactors cannot silently
+    shift simulated timing (which would invalidate recorded baselines).
+    """
+    return _jitter((seed * _SEED_MULT) & _U64, src, dst, seq)
 
 
 # ---------------------------------------------------------------------------
 # Messages and operations
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False, slots=True)
 class Op:
     op_id: int
     client: int
@@ -100,7 +152,7 @@ class Op:
                                # because per-object apply order is agreed)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False, slots=True)
 class Msg:
     kind: str
     src: int
@@ -109,18 +161,35 @@ class Msg:
     size_ops: int = 0          # number of ops carried (drives c_parse)
 
 
+class TimerHandle:
+    """Returned by :meth:`Simulation.set_timer`; ``cancel()`` makes the
+    pending timer die lazily in the event loop (no heap surgery)."""
+
+    __slots__ = ("alive",)
+
+    def __init__(self):
+        self.alive = True
+
+    def cancel(self) -> None:
+        self.alive = False
+
+
 class Node:
     """Base class for replicas and clients. Subclasses implement handlers."""
 
     def __init__(self, node_id: int, sim: "Simulation"):
         self.node_id = node_id
         self.sim = sim
+        self._handlers: Dict[str, Callable] = {}   # msg kind -> bound method
 
     def on_message(self, msg: Msg, now: float) -> None:
-        handler = getattr(self, "on_" + msg.kind.lower(), None)
+        handler = self._handlers.get(msg.kind)
         if handler is None:
-            raise ValueError(f"{type(self).__name__} has no handler for "
-                             f"{msg.kind}")
+            handler = getattr(self, "on_" + msg.kind.lower(), None)
+            if handler is None:
+                raise ValueError(f"{type(self).__name__} has no handler for "
+                                 f"{msg.kind}")
+            self._handlers[msg.kind] = handler
         handler(msg, now)
 
     def on_timer(self, name: str, payload: dict, now: float) -> None:
@@ -136,16 +205,34 @@ class Node:
         for d in dsts:
             self.send(d, kind, payload, size_ops)
 
-    def set_timer(self, delay: float, name: str, payload: dict | None = None):
-        self.sim.set_timer(self.node_id, delay, name, payload or {})
+    def set_timer(self, delay: float, name: str,
+                  payload: dict | None = None) -> TimerHandle:
+        return self.sim.set_timer(self.node_id, delay, name, payload or {})
 
 
 # ---------------------------------------------------------------------------
 # The event loop
 # ---------------------------------------------------------------------------
 
+# heap event kinds (ints compare faster than strings and never reach the
+# tuple comparison anyway — (time, seq) is always unique)
+_ARRIVE, _PROC, _TIMER, _CRASH, _RECOVER = 0, 1, 2, 3, 4
+
+
 class Simulation:
     """Event loop with FIFO service queues and deterministic jitter."""
+
+    # prune _link_last when it holds this many entries (amortized: the cap
+    # doubles to the live size after each prune, so a genuinely large
+    # active link set doesn't rescan per message)
+    LINK_TABLE_PRUNE = 4096
+    # pause the cyclic GC inside run(): the event loop allocates heavily
+    # (messages, heap tuples, payloads) against a large live heap, so
+    # generational collections burn 10-20% of wall time scanning objects
+    # that refcounting alone reclaims. Everything the loop churns is
+    # acyclic; cycle garbage created mid-run is collected when the GC
+    # resumes at exit.
+    GC_PAUSE = True
 
     def __init__(self, n_replicas: int, costs: CostModel | None = None,
                  seed: int = 0, group_size: int | None = None,
@@ -164,20 +251,35 @@ class Simulation:
         self.client_home: Dict[int, int] = dict(client_home or {})
         self.now = 0.0
         self.nodes: Dict[int, Node] = {}
-        self._heap: List[Tuple[float, int, str, object]] = []
-        self._seq = itertools.count()
-        self._busy_until: Dict[int, float] = {}
-        self._msg_seq = itertools.count()
-        self._link_last: Dict[Tuple[int, int], float] = {}  # FIFO per link
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self._msg_seq = 0
+        self._seed_term = (seed * _SEED_MULT) & _U64
+        self._jit_scale = self.costs.net_jitter * _INV_2_64
+        # flat per-node service state (rebuilt lazily when nodes change)
+        self._nodes: List[Optional[Node]] = []
+        self._busy: List[float] = []
+        self._send_c: List[float] = []
+        self._recv_c: List[float] = []
+        self._parse_c: List[float] = []
+        self._delay_base: List[List[float]] = []
+        self._tables_ok = False
+        self._link_last: Dict[int, float] = {}  # FIFO per link (src<<24|dst)
+        self._link_cap = self.LINK_TABLE_PRUNE
         self.crashed: set[int] = set()
+        self.clients_done = 0          # bumped by Client on completion
+        # engine telemetry (surfaced in RunResult / bench_engine)
         self.stats_messages = 0
         self.stats_events = 0
+        self.stats_collapsed = 0       # arrive+proc pairs run inline
+        self.heap_peak = 0
+        self.wall_s = 0.0
 
     # -- wiring --------------------------------------------------------------
 
     def add_node(self, node: Node) -> None:
         self.nodes[node.node_id] = node
-        self._busy_until[node.node_id] = 0.0
+        self._tables_ok = False
 
     def replicas(self) -> List[int]:
         return [i for i in range(self.n) if i not in self.crashed]
@@ -194,7 +296,9 @@ class Simulation:
     def _group(self, node_id: int) -> int:
         return node_id // self.group_size
 
-    def _net_delay(self, src: int, dst: int) -> float:
+    def _delay_base_for(self, src: int, dst: int) -> float:
+        """One-way delay base (everything but jitter) — precomputed per
+        (src, dst) into ``_delay_base`` at table-build time."""
         c = self.costs
         if self._is_replica(src) and self._is_replica(dst):
             base = c.net_base
@@ -210,100 +314,210 @@ class Simulation:
         for e in (src, dst):
             if self._is_replica(e):
                 base += c.dist(self._local(e))
-        jit = _hash_uniform(self.seed, src, dst, next(self._msg_seq)) \
-            * c.net_jitter
-        return base + jit
+        return base
 
-    def _recv_cost(self, node_id: int, msg: Msg) -> float:
+    def _build_tables(self) -> None:
+        """Flatten per-node costs + pairwise delay bases into lists.
+        Mutates the existing list objects IN PLACE: ``run()`` binds them
+        to locals for speed, so a mid-run rebuild (a node added by a
+        handler) must stay visible to the live event loop."""
+        size = (max(self.nodes) + 1) if self.nodes else 0
         c = self.costs
-        if not self._is_replica(node_id):
-            return 1e-6  # clients are not the bottleneck under study
-        return (c.c_recv + c.c_parse * msg.size_ops) \
-            * c.speed(self._local(node_id))
-
-    def _send_cost(self, node_id: int) -> float:
-        if not self._is_replica(node_id):
-            return 1e-6
-        return self.costs.c_send * self.costs.speed(self._local(node_id))
+        self._nodes[:] = (self.nodes.get(i) for i in range(size))
+        self._busy[:] = [self._busy[i] if i < len(self._busy) else 0.0
+                         for i in range(size)]
+        send_c, recv_c, parse_c = [], [], []
+        for i in range(size):
+            if i < self.n:
+                sp = c.speed(self._local(i))
+                send_c.append(c.c_send * sp)
+                recv_c.append(c.c_recv * sp)
+                parse_c.append(c.c_parse * sp)
+            else:                   # clients are not the bottleneck
+                send_c.append(1e-6)
+                recv_c.append(1e-6)
+                parse_c.append(0.0)
+        self._send_c[:] = send_c
+        self._recv_c[:] = recv_c
+        self._parse_c[:] = parse_c
+        self._delay_base[:] = [[self._delay_base_for(s, d)
+                                for d in range(size)] for s in range(size)]
+        self._tables_ok = True
 
     def busy(self, node_id: int, seconds: float) -> None:
         """Charge CPU time to a node (per-op coordination / apply costs)."""
-        self._busy_until[node_id] = (
-            max(self._busy_until[node_id], self.now) + seconds)
+        if not self._tables_ok:
+            self._build_tables()
+        b = self._busy
+        t = b[node_id]
+        now = self.now
+        b[node_id] = (t if t > now else now) + seconds
 
     # -- event posting --------------------------------------------------------
 
     def post(self, msg: Msg) -> None:
         """Send a message: charge the sender, delay, enqueue arrival."""
-        if msg.src in self.crashed or msg.dst in self.crashed:
+        if not self._tables_ok:
+            self._build_tables()
+        src = msg.src
+        dst = msg.dst
+        if self.crashed and (src in self.crashed or dst in self.crashed):
             return
-        send_done = max(self._busy_until[msg.src], self.now) \
-            + self._send_cost(msg.src)
-        self._busy_until[msg.src] = send_done
-        arrive = send_done + self._net_delay(msg.src, msg.dst)
+        b = self._busy
+        t = b[src]
+        now = self.now
+        send_done = (t if t > now else now) + self._send_c[src]
+        b[src] = send_done
+        mseq = self._msg_seq
+        self._msg_seq = mseq + 1
+        # splitmix64 jitter, inlined (see hash_jitter_u01)
+        x = (self._seed_term + src * _SRC_MULT + dst * _DST_MULT + mseq) \
+            & _U64
+        x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _U64
+        x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _U64
+        arrive = send_done + self._delay_base[src][dst] \
+            + ((x ^ (x >> 31)) & _U64) * self._jit_scale
         # per-link FIFO delivery (TCP semantics): messages on one connection
-        # never reorder, which real protocol implementations rely on
-        link = (msg.src, msg.dst)
-        arrive = max(arrive, self._link_last.get(link, 0.0) + 1e-9)
-        self._link_last[link] = arrive
-        heapq.heappush(self._heap, (arrive, next(self._seq), "arrive", msg))
+        # never reorder, which real protocol implementations rely on.
+        # Links key as src<<24|dst: int dict ops beat tuple keys.
+        link = (src << 24) | dst
+        ll = self._link_last
+        last = ll.get(link)
+        if last is not None and arrive < last + 1e-9:
+            arrive = last + 1e-9
+        ll[link] = arrive
+        if len(ll) >= self._link_cap:
+            self._prune_links()
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (arrive, seq, _ARRIVE, msg))
         self.stats_messages += 1
 
+    def _prune_links(self) -> None:
+        """Drop link-FIFO entries that can no longer constrain an arrival
+        (every future arrival lands strictly after ``now``), then double
+        the prune threshold to the live size so a large *active* link set
+        doesn't rescan on every post."""
+        now = self.now
+        self._link_last = {k: v for k, v in self._link_last.items()
+                           if v > now}
+        self._link_cap = max(self.LINK_TABLE_PRUNE,
+                             2 * len(self._link_last))
+
     def set_timer(self, node_id: int, delay: float, name: str,
-                  payload: dict) -> None:
-        heapq.heappush(self._heap, (self.now + delay, next(self._seq),
-                                    "timer", (node_id, name, payload)))
+                  payload: dict) -> TimerHandle:
+        handle = TimerHandle()
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (self.now + delay, seq, _TIMER,
+                                    (node_id, name, payload, handle)))
+        return handle
 
     def crash(self, node_id: int, at: float) -> None:
-        heapq.heappush(self._heap, (at, next(self._seq), "crash", node_id))
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (at, seq, _CRASH, node_id))
 
     def recover(self, node_id: int, at: float) -> None:
-        heapq.heappush(self._heap, (at, next(self._seq), "recover", node_id))
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (at, seq, _RECOVER, node_id))
 
     # -- run ------------------------------------------------------------------
 
     def run(self, until: float = float("inf"),
             stop: Optional[Callable[[], bool]] = None,
-            max_events: int = 50_000_000) -> float:
+            max_events: int = 50_000_000,
+            stop_when_clients_done: Optional[int] = None) -> float:
         """Event loop. ``now`` is strictly monotone: message arrival and
         message processing-completion are separate events, so a busy node's
-        deferred processing never drags the global clock backwards."""
-        while self._heap:
-            if stop is not None and stop():
-                break
-            t, _, kind, item = heapq.heappop(self._heap)
-            if t > until:
-                self.now = until
-                break
-            self.now = t
-            self.stats_events += 1
-            if self.stats_events > max_events:
-                raise RuntimeError("simulation event budget exceeded")
-            if kind == "crash":
-                self.crashed.add(item)
-            elif kind == "recover":
-                self.crashed.discard(item)
-                self._busy_until[item] = t
-                hook = getattr(self.nodes.get(item), "on_recover", None)
-                if hook is not None:
-                    hook(t)
-            elif kind == "timer":
-                node_id, name, payload = item
-                if node_id not in self.crashed:
-                    self.nodes[node_id].on_timer(name, payload, t)
-            elif kind == "arrive":
-                msg: Msg = item
-                if msg.dst not in self.crashed:
-                    # FIFO service: start when the node frees up
-                    start = max(t, self._busy_until[msg.dst])
-                    done = start + self._recv_cost(msg.dst, msg)
-                    self._busy_until[msg.dst] = done
-                    heapq.heappush(self._heap,
-                                   (done, next(self._seq), "proc", msg))
-            else:  # proc — handler runs at processing completion time
-                msg = item
-                if msg.dst not in self.crashed:
-                    self.nodes[msg.dst].on_message(msg, t)
+        deferred processing never drags the global clock backwards. The
+        idle-path collapse below preserves that contract: the inline
+        handler runs at the processing-completion time, and only when no
+        other event is scheduled before it."""
+        if not self._tables_ok:
+            self._build_tables()
+        heap = self._heap
+        pop = heapq.heappop
+        push = heapq.heappush
+        busy = self._busy
+        nodes = self._nodes
+        recv_c = self._recv_c
+        parse_c = self._parse_c
+        crashed = self.crashed
+        events = self.stats_events
+        collapsed = self.stats_collapsed
+        peak = self.heap_peak
+        t_wall = time.perf_counter()
+        gc_was_on = self.GC_PAUSE and gc.isenabled()
+        if gc_was_on:
+            gc.disable()
+        try:
+            done_target = stop_when_clients_done
+            while heap:
+                # stop checks: the counter compare is the hot default
+                # (runner experiments); the callable is the general hook
+                if done_target is not None:
+                    if self.clients_done >= done_target:
+                        break
+                elif stop is not None and stop():
+                    break
+                if not (events & 255) and len(heap) > peak:
+                    peak = len(heap)        # sampled (cheap, ~exact)
+                t, _, kind, item = pop(heap)
+                if t > until:
+                    self.now = until
+                    break
+                self.now = t
+                events += 1
+                if events > max_events:
+                    raise RuntimeError("simulation event budget exceeded")
+                if kind == _ARRIVE:
+                    msg: Msg = item
+                    dst = msg.dst
+                    if not crashed or dst not in crashed:
+                        # FIFO service: start when the node frees up
+                        bt = busy[dst]
+                        done = (t if t >= bt else bt) + recv_c[dst] \
+                            + parse_c[dst] * msg.size_ops
+                        busy[dst] = done
+                        if done <= until and (not heap
+                                              or heap[0][0] > done):
+                            # destination idle path: nothing can happen
+                            # before processing completes — run the
+                            # handler inline at its completion time
+                            self.now = done
+                            events += 1
+                            collapsed += 1
+                            nodes[dst].on_message(msg, done)
+                        else:
+                            seq = self._seq
+                            self._seq = seq + 1
+                            push(heap, (done, seq, _PROC, msg))
+                elif kind == _PROC:
+                    # handler runs at processing completion time
+                    msg = item
+                    if not crashed or msg.dst not in crashed:
+                        nodes[msg.dst].on_message(msg, t)
+                elif kind == _TIMER:
+                    node_id, name, payload, handle = item
+                    if handle.alive and node_id not in crashed:
+                        nodes[node_id].on_timer(name, payload, t)
+                elif kind == _CRASH:
+                    crashed.add(item)
+                else:  # _RECOVER
+                    crashed.discard(item)
+                    busy[item] = t
+                    hook = getattr(self.nodes.get(item), "on_recover", None)
+                    if hook is not None:
+                        hook(t)
+        finally:
+            if gc_was_on:
+                gc.enable()
+            self.stats_events = events
+            self.stats_collapsed = collapsed
+            self.heap_peak = peak
+            self.wall_s += time.perf_counter() - t_wall
         return self.now
 
 
@@ -323,14 +537,17 @@ class Workload:
     reads_fraction: float = 0.0
 
     def sample_object(self, client: int, rng: np.random.Generator) -> int:
+        # index draws use random()*N (uniform up to fp granularity): it is
+        # ~2.5x cheaper per call than Generator.integers and this runs
+        # once per generated op
         u = rng.random()
         if u < self.p_independent:
             # private namespace per client, wide enough that birthday
             # self-collisions stay negligible even at batch 4000
-            return (client << 24) | int(rng.integers(0, 1 << 20))
+            return (client << 24) | int(rng.random() * (1 << 20))
         if u < self.p_independent + self.p_common:
-            return (1 << 60) | int(rng.integers(0, self.n_common_objects))
-        return (1 << 61) | int(rng.integers(0, self.n_hot_objects))
+            return (1 << 60) | int(rng.random() * self.n_common_objects)
+        return (1 << 61) | int(rng.random() * self.n_hot_objects)
 
 
 class Client(Node):
@@ -342,6 +559,8 @@ class Client(Node):
     cap" (§5.1) means. Unacked batches are retried against a different
     replica after ``RETRY`` seconds (idempotent op ids make this safe),
     which is how clients fail over from a crashed coordinator/leader.
+    Retry timers are cancelled the moment a batch fully acks, so at high
+    throughput the heap is not full of doomed-to-no-op timer events.
     """
 
     RETRY = 0.25
@@ -362,9 +581,10 @@ class Client(Node):
         self.rng = np.random.default_rng((sim.seed << 16) ^ node_id)
         self.ops: List[Op] = []      # every op this client created
         self._open: Dict[int, dict] = {}   # batch_id -> {ops, acked, attempt}
-        self._next_op = itertools.count()
-        self._next_batch = itertools.count()
+        self._next_op = 0
+        self._next_batch = 0
         self.value_seed = value_seed
+        self._done = False
         self._suspect: Dict[int, float] = {}   # replica -> suspicion expiry
         # client-global ack dedup: an op may be credited more than once
         # (retries reaching two coordinators; in sharded runs the old and
@@ -374,6 +594,8 @@ class Client(Node):
 
     def _pick_target(self, k: int) -> int:
         t = self.target_fn(k)
+        if not self._suspect:
+            return t
         for _ in range(self.sim.n):
             if self._suspect.get(t, 0.0) < self.sim.now:
                 return t
@@ -389,24 +611,35 @@ class Client(Node):
 
     def _make_batch(self) -> List[Op]:
         ops = []
+        rng = self.rng
+        reads = self.workload.reads_fraction
+        now = self.sim.now
+        node_id = self.node_id
+        value_seed = self.value_seed
         for _ in range(self.batch_size):
-            oid = (self.node_id << 40) | next(self._next_op)
+            oid = (node_id << 40) | self._next_op
+            self._next_op += 1
             obj = self._sample_object()
-            kind = ("r" if self.rng.random()
-                    < self.workload.reads_fraction else "w")
-            ops.append(Op(oid, self.node_id, obj, kind,
-                          value=oid ^ self.value_seed,
-                          submit_time=self.sim.now))
+            kind = "r" if rng.random() < reads else "w"
+            ops.append(Op(oid, node_id, obj, kind, oid ^ value_seed, now))
         return ops
+
+    def _new_batch_id(self) -> int:
+        bid = (self.node_id << 32) | self._next_batch
+        self._next_batch += 1
+        return bid
 
     def _dispatch(self, ops: List[Op]) -> None:
         """Routing hook (ShardClient splits per owning group instead)."""
-        bid = (self.node_id << 32) | next(self._next_batch)
+        bid = self._new_batch_id()
         target = self._pick_target(self.submitted)
-        self._open[bid] = {"ops": ops, "attempt": 0, "target": target}
+        rec = {"ops": ops, "attempt": 0, "target": target,
+               "unacked": {op.op_id for op in ops}}
+        self._open[bid] = rec
         self.send(target, "client_req",
                   {"batch_id": bid, "ops": ops}, size_ops=len(ops))
-        self.set_timer(self.RETRY, "client_retry", {"bid": bid})
+        rec["timer"] = self.set_timer(self.RETRY, "client_retry",
+                                      {"bid": bid})
 
     def _maybe_submit(self) -> None:
         while (self.submitted < self.total
@@ -418,6 +651,12 @@ class Client(Node):
             self.inflight_ops += self.batch_size
             self._dispatch(ops)
 
+    def _close_batch(self, bid: int, rec: dict) -> None:
+        self._open.pop(bid, None)
+        timer = rec.get("timer")
+        if timer is not None:
+            timer.cancel()
+
     def on_client_reply(self, msg: Msg, now: float) -> None:
         bid = msg.payload["batch_id"]
         rec = self._open.get(bid)
@@ -427,12 +666,19 @@ class Client(Node):
             ids = set(msg.payload["op_ids"])
         else:                            # whole-batch ack (EPaxos finish)
             ids = {op.op_id for op in rec["ops"]}
-        fresh = ids - self._acked
-        self._acked |= fresh
+        acked = self._acked
+        fresh = ids - acked
+        acked |= fresh
         self.inflight_ops -= len(fresh)
         self.completed_ops += len(fresh)
-        if all(op.op_id in self._acked for op in rec["ops"]):
-            self._open.pop(bid, None)
+        unacked = rec["unacked"]
+        unacked.difference_update(ids)
+        if not unacked:
+            self._close_batch(bid, rec)
+        if not self._done and self.completed_ops >= \
+                self.total * self.batch_size:
+            self._done = True
+            self.sim.clients_done += 1
         self._maybe_submit()
 
     def _retry_target(self, rec: dict) -> int:
@@ -449,14 +695,19 @@ class Client(Node):
             return
         rec["attempt"] += 1
         # the unresponsive target is suspected for a while: new batches
-        # fail over immediately instead of paying a retry timeout each
+        # fail over immediately instead of paying a retry timeout each.
+        # Prune expired suspicions on the way in — over a long run with
+        # transient timeouts this map otherwise only ever grows.
+        if self._suspect:
+            self._suspect = {r: exp for r, exp in self._suspect.items()
+                             if exp >= now}
         self._suspect[rec["target"]] = now + self.RETRY * 16
         rec["target"] = self._retry_target(rec)
         self.send(rec["target"], "client_req",
                   {"batch_id": payload["bid"], "ops": rec["ops"]},
                   size_ops=len(rec["ops"]))
-        self.set_timer(self.RETRY * min(4, 1 + rec["attempt"]),
-                       "client_retry", payload)
+        rec["timer"] = self.set_timer(self.RETRY * min(4, 1 + rec["attempt"]),
+                                      "client_retry", payload)
 
     def done(self) -> bool:
         return self.completed_ops >= self.total * self.batch_size
@@ -480,6 +731,11 @@ class RunResult:
     latency_p99_ms: float
     fast_path_frac: float
     messages: int
+    # engine telemetry (wall-clock side — excluded from determinism checks)
+    events: int = 0
+    events_per_sec: float = 0.0
+    wall_s: float = 0.0
+    heap_peak: int = 0
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_replicas},{self.n_clients},"
@@ -503,4 +759,9 @@ def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
         latency_p50_ms=float(np.percentile(lat, 50)) if len(lat) else float("nan"),
         latency_p99_ms=float(np.percentile(lat, 99)) if len(lat) else float("nan"),
         fast_path_frac=fast / len(ops) if ops else 0.0,
-        messages=sim.stats_messages)
+        messages=sim.stats_messages,
+        events=sim.stats_events,
+        events_per_sec=(sim.stats_events / sim.wall_s
+                        if sim.wall_s > 0 else 0.0),
+        wall_s=sim.wall_s,
+        heap_peak=sim.heap_peak)

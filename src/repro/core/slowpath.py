@@ -32,7 +32,7 @@ from typing import Dict, List, Optional
 from repro.core.simulator import Msg, Op
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False, slots=True)
 class SlowInstance:
     inst_id: int
     ops: List[Op]
@@ -41,6 +41,7 @@ class SlowInstance:
     propose_time: float
     deps: Dict[int, List[int]]
     committed: bool = False
+    timer: object = None      # slow_inst_timeout handle (cancelled on commit)
 
 
 class SlowPathMixin:
@@ -71,6 +72,45 @@ class SlowPathMixin:
                 self._slow_obj_count.pop(op.obj, None)
             else:
                 self._slow_obj_count[op.obj] = k
+
+    # -- batch post-apply tail (shared by WocReplica / CabinetReplica) ---------
+
+    def _finalize_batch(self, ops: List[Op], now: float, path: str) -> None:
+        """Hoisted per-op tail of ``on_applied`` for batch applies:
+        retransmit/pending cleanup plus client batch accounting and credit
+        buffering. Requires the host class's ``op2batch``/``pending``
+        bookkeeping (WocReplica, CabinetReplica). This runs
+        committed_ops x n_replicas times per experiment — one shared copy,
+        locals hoisted."""
+        forwarded = self._forwarded
+        slow_pending = self._slow_pending
+        op2batch = self.op2batch
+        pending = self.pending
+        credit_buf = self._credit_buf
+        for op in ops:
+            op_id = op.op_id
+            if forwarded:
+                forwarded.pop(op_id, None)
+            if slow_pending and op_id in slow_pending:
+                self._slow_pending_remove(op)
+            bid = op2batch.pop(op_id, None)
+            if bid is None:
+                continue
+            if op.commit_time < 0:
+                op.commit_time = now
+                op.path = path
+            rec = pending.get(bid)
+            if rec is None:
+                continue
+            rec["remaining"].discard(op_id)
+            key = (rec["client"], bid)
+            buf = credit_buf.get(key)
+            if buf is None:
+                credit_buf[key] = [op_id]
+            else:
+                buf.append(op_id)
+            if not rec["remaining"]:
+                pending.pop(bid, None)
 
     # -- any replica: forward to leader (lines 2-3) ----------------------------
 
@@ -131,9 +171,7 @@ class SlowPathMixin:
         while (self.slow_queue
                and len(ops) + len(self.slow_queue[0]) <= self.group_cap):
             ops.extend(self.slow_queue.popleft())
-        c = self.sim.costs
-        self.sim.busy(self.node_id, c.c_coord * len(ops)
-                      * c.speed(self.node_id))
+        self.sim.busy(self.node_id, self._coord_cost * len(ops))
         # cross-path deps: fast ops live at the leader for these objects
         # must apply first, everywhere (leader in_flight holds fast entries
         # only — slow ops are tracked in _slow_pending)
@@ -151,11 +189,11 @@ class SlowPathMixin:
                             acked={self.node_id}, propose_time=now,
                             deps=deps)
         self.slow_inst = inst
-        others = [r for r in range(self.sim.n) if r != self.node_id]
-        self.broadcast(others, "slow_propose",
+        self.broadcast(self._others, "slow_propose",
                        {"inst": inst.inst_id, "ops": ops}, size_ops=len(ops))
-        self.set_timer(self.sim.costs.timeout, "slow_inst_timeout",
-                       {"inst": inst.inst_id})
+        inst.timer = self.set_timer(self.sim.costs.timeout,
+                                    "slow_inst_timeout",
+                                    {"inst": inst.inst_id})
         self._slow_check_commit(inst, now)
 
     def on_slow_accept(self, msg: Msg, now: float) -> None:
@@ -179,8 +217,9 @@ class SlowPathMixin:
         if inst.committed or inst.psum <= self.node_threshold():  # strict
             return
         inst.committed = True
-        others = [r for r in range(self.sim.n) if r != self.node_id]
-        self.broadcast(others, "slow_commit",
+        if inst.timer is not None:
+            inst.timer.cancel()
+        self.broadcast(self._others, "slow_commit",
                        {"ops": inst.ops, "deps": inst.deps},
                        size_ops=len(inst.ops))
         self._apply_slow_commit(inst.ops, inst.deps, now)
@@ -193,6 +232,8 @@ class SlowPathMixin:
         if inst is None or msg.payload["inst"] != inst.inst_id:
             return
         # lost leadership: hand the instance to the current leader
+        if inst.timer is not None:
+            inst.timer.cancel()
         self.slow_inst = None
         self.slow_mutex = False
         for op in inst.ops:
@@ -219,7 +260,7 @@ class SlowPathMixin:
                            deps: Dict[int, List[int]], now: float) -> None:
         for op in ops:
             op.path = op.path or "slow"
-            self.apply_commit(op, now, "slow", deps.get(op.op_id))
+        self.apply_commit_batch(ops, deps, now, "slow")
         self.flush_credits()
 
     # -- timers --------------------------------------------------------------------
@@ -249,7 +290,8 @@ class SlowPathMixin:
                 self.broadcast(missing, "slow_propose",
                                {"inst": inst.inst_id, "ops": inst.ops},
                                size_ops=len(inst.ops))
-                self.set_timer(self.sim.costs.timeout, "slow_inst_timeout",
-                               {"inst": inst.inst_id})
+                inst.timer = self.set_timer(self.sim.costs.timeout,
+                                            "slow_inst_timeout",
+                                            {"inst": inst.inst_id})
         elif name == "fast_timeout":
             self.on_fast_timeout(payload, now)

@@ -36,29 +36,37 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
     def on_client_req(self, msg: Msg, now: float) -> None:
         ops: List[Op] = msg.payload["ops"]
         bid = msg.payload["batch_id"]
-        rec = {"client": msg.src, "remaining": set()}
+        remaining = set()
+        rec = {"client": msg.src, "remaining": remaining}
         self.pending[bid] = rec
         fast_ops, slow_ops = [], []
+        applied_ops = self.rsm.applied_ops
+        op2batch = self.op2batch
+        om_route = self.om.route
+        slow_count = self._slow_obj_count
+        node_id = self.node_id
         for op in ops:
-            if op.op_id in self.rsm.applied_ops:       # client retry of a
+            op_id = op.op_id
+            if op_id in applied_ops:                   # client retry of a
                 if op.commit_time < 0:                 # committed op whose
                     op.commit_time = now               # coordinator died
                     op.path = op.path or "slow"        # before stamping it
-                self.credit_op(msg.src, bid, op.op_id)
+                self.credit_op(msg.src, bid, op_id)
                 continue
-            rec["remaining"].add(op.op_id)
-            self.op2batch[op.op_id] = bid
-            route = self.om.route(op.obj, op.op_id, op.client,
-                                  self.node_id, now)
-            if route is Route.FAST and self._slow_obj_count.get(op.obj):
-                route = Route.SLOW     # slow op queued here (we are leader)
+            remaining.add(op_id)
+            op2batch[op_id] = bid
+            route = om_route(op.obj, op_id, op.client, node_id, now)
             if route is Route.FAST:
+                if slow_count and slow_count.get(op.obj):
+                    # slow op queued here (we are leader)
+                    slow_ops.append(op)
+                    continue
                 # coordinator's own in-flight registration (self-vote side)
-                self.register_inflight(op.obj, op.op_id, now)
+                self.register_inflight(op.obj, op_id, now)
                 fast_ops.append(op)
             else:
                 slow_ops.append(op)
-        if not rec["remaining"]:
+        if not remaining:
             self.pending.pop(bid, None)
         self.start_fast(fast_ops, now)
         self.forward_slow(slow_ops, now)
@@ -67,13 +75,32 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
     # -- commit bookkeeping -------------------------------------------------------
 
     def on_applied(self, op: Op, now: float, path: str) -> None:
-        self.om.complete(op.obj, op.op_id, now)
-        self._forwarded.pop(op.op_id, None)
-        self._slow_pending_remove(op)
+        op_id = op.op_id
+        # om tracking exists only where this replica coordinated the op —
+        # at the other n-1 replicas the lookup misses and the call is skipped
+        d = self.om.in_flight.get(op.obj)
+        if d and op_id in d:
+            self.om.complete(op.obj, op_id, now)
+        if self._forwarded:
+            self._forwarded.pop(op_id, None)
+        if op_id in self._slow_pending:
+            self._slow_pending_remove(op)
         self.finalize_op(op, now, path)
 
+    def on_applied_batch(self, ops, now: float, path: str) -> None:
+        """Hot path: om completion for coordinated ops, then the shared
+        finalize tail (SlowPathMixin._finalize_batch)."""
+        om = self.om
+        om_in_flight = om.in_flight
+        for op in ops:
+            d = om_in_flight.get(op.obj)
+            if d and op.op_id in d:
+                om.complete(op.obj, op.op_id, now)
+        self._finalize_batch(ops, now, path)
+
     def finalize_op(self, op: Op, now: float, path: str) -> None:
-        bid = self.op2batch.pop(op.op_id, None)
+        op_id = op.op_id
+        bid = self.op2batch.pop(op_id, None)
         if bid is None:
             return
         if op.commit_time < 0:
@@ -82,7 +109,7 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
         rec = self.pending.get(bid)
         if rec is None:
             return
-        rec["remaining"].discard(op.op_id)
-        self.credit_op(rec["client"], bid, op.op_id)
+        rec["remaining"].discard(op_id)
+        self.credit_op(rec["client"], bid, op_id)
         if not rec["remaining"]:
             self.pending.pop(bid, None)

@@ -69,8 +69,9 @@ class GroupView:
         self.root.post(msg)
 
     def set_timer(self, node_id: int, delay: float, name: str,
-                  payload: dict) -> None:
-        self.root.set_timer(self.to_global(node_id), delay, name, payload)
+                  payload: dict):
+        return self.root.set_timer(self.to_global(node_id), delay, name,
+                                   payload)
 
     def busy(self, node_id: int, seconds: float) -> None:
         self.root.busy(self.to_global(node_id), seconds)

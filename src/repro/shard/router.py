@@ -87,14 +87,15 @@ class ShardClient(Client):
     def _sample_local(self) -> int:
         """Rejection-sample a private object whose hash partition is the
         home group (expected n_groups tries; capped for safety)."""
+        rng = self.rng
         for _ in range(64):
-            obj = (self.node_id << 24) | int(self.rng.integers(0, 1 << 20))
+            obj = (self.node_id << 24) | int(rng.random() * (1 << 20))
             if self.smap.default_group(obj) == self.home:
                 return obj
         return obj
 
     def _sample_private_any(self) -> int:
-        return (self.node_id << 24) | int(self.rng.integers(0, 1 << 20))
+        return (self.node_id << 24) | int(self.rng.random() * (1 << 20))
 
     def _refresh_wset(self) -> None:
         w = self.swl
@@ -159,13 +160,15 @@ class ShardClient(Client):
             if grp != self.home:
                 self._note_remote(op.obj, grp)
         for grp, sub in by_group.items():
-            bid = (self.node_id << 32) | next(self._next_batch)
+            bid = self._new_batch_id()
             target = self._group_target(grp, self.submitted)
-            self._open[bid] = {"ops": sub, "attempt": 0,
-                               "target": target, "group": grp}
+            rec = {"ops": sub, "attempt": 0, "target": target, "group": grp,
+                   "unacked": {op.op_id for op in sub}}
+            self._open[bid] = rec
             self.send(target, "client_req",
                       {"batch_id": bid, "ops": sub}, size_ops=len(sub))
-            self.set_timer(self.RETRY, "client_retry", {"bid": bid})
+            rec["timer"] = self.set_timer(self.RETRY, "client_retry",
+                                          {"bid": bid})
 
     def _make_batch(self) -> List[Op]:
         if (self.swl.locality == "drift"
@@ -190,8 +193,9 @@ class ShardClient(Client):
                     break
         if rec is not None and moved:
             rec["ops"] = [op for op in rec["ops"] if op not in moved]
-            if all(op.op_id in self._acked for op in rec["ops"]):
-                self._open.pop(msg.payload["batch_id"], None)
+            rec["unacked"] = {op.op_id for op in rec["ops"]} - self._acked
+            if not rec["unacked"]:
+                self._close_batch(msg.payload["batch_id"], rec)
         if moved:
             self.redirected_ops += len(moved)
             self._dispatch(moved)

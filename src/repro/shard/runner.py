@@ -79,6 +79,11 @@ class ShardedRunResult:
     remote_frac: float                 # dispatches to a non-home group
     steal_hints: int
     per_group: List[ShardGroupStats] = dataclasses.field(default_factory=list)
+    # engine telemetry (wall-clock side — excluded from determinism checks)
+    events: int = 0
+    events_per_sec: float = 0.0
+    wall_s: float = 0.0
+    heap_peak: int = 0
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_groups},{self.group_size},"
@@ -142,8 +147,7 @@ def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
 
     for c in clients:
         c.start()
-    sim.run(until=cfg.sim_time_cap, stop=lambda: all(c.done()
-                                                     for c in clients))
+    sim.run(until=cfg.sim_time_cap, stop_when_clients_done=len(clients))
     return ShardedRunArtifacts(
         _collect(cfg, sim, clients, gates), sim, replicas, gates, clients)
 
@@ -174,6 +178,8 @@ def _collect(cfg: ShardedRunConfig, sim: Simulation,
         redirect_rate=redirected / committed if committed else 0.0,
         remote_frac=remote / max(1, committed),
         steal_hints=sum(c.hints_sent for c in clients),
+        events=m.events, events_per_sec=m.events_per_sec,
+        wall_s=m.wall_s, heap_peak=m.heap_peak,
         per_group=[ShardGroupStats(
             group=g.group, ops_admitted=g.ops_admitted,
             redirects=g.redirects, fenced_ops=g.fenced_ops,
