@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Claims, write_json
+from benchmarks.common import Claims, calibration_score, write_json
 
 from repro.core.runner import RunConfig
 from repro.core.runner import run as run_experiment
@@ -54,26 +54,8 @@ SECONDARY_BASELINE_EVENTS_PER_SEC = 32_303.0     # batch=10, 10k ops
 BASELINE_PROBE_SCORE = 2_850_000.0               # calibration_score() then
 SPEEDUP_TARGET = 3.0
 
-
-def calibration_score(iters: int = 300_000) -> float:
-    """Machine-speed probe: interpreter ops/sec on an engine-like mix of
-    dict traffic, int math, and bound-method-free loops. Baselines are
-    recorded together with this score; claims scale them by the ratio of
-    the probe at claim time, making the comparison approximately
-    machine-independent."""
-    best = 0.0
-    for _ in range(3):
-        d: dict = {}
-        acc = 0
-        t0 = time.perf_counter()
-        for i in range(iters):
-            k = (i * 0x9E3779B97F4A7C15) & 1023
-            d[k] = i
-            acc += d.get((k * 7) & 1023, 0)
-        dt = time.perf_counter() - t0
-        if dt > 0:
-            best = max(best, iters / dt)
-    return best
+# calibration_score lives in benchmarks.common (shared with the
+# bench_parallel_shard suite); re-exported above for baseline provenance.
 
 REFERENCE = dict(protocol="woc", n_replicas=9, n_clients=4, batch_size=100,
                  t_fail=2, seed=0)

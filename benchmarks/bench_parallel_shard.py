@@ -1,0 +1,127 @@
+"""Parallel sharded simulation benchmark (PR 3 tentpole): wall-clock
+scaling of per-group event engines vs the single-heap serial oracle.
+
+The reference scenario is the G=8 uniform-locality point of the shard
+scaling sweep — the exact configuration the serial engine is slowest on
+and the regime the paper's >70%-independent claim targets. Measurement
+uses the shared paired interleaved A/B harness (benchmarks.common): the
+serial and parallel runs alternate so container CPU-share noise hits
+both sides, and the speedup claim reads the ratio of medians.
+
+Two claims ride along that are NOT machine-dependent:
+
+  * serial (workers=1) and parallel (workers>=2) runs of the reference
+    are **bit-identical** on every non-telemetry ShardedRunResult field
+    (the tentpole's determinism contract, also pinned per-locality by
+    tests/test_parallel.py);
+  * barrier/idle telemetry is populated, so lookahead tuning is
+    observable rather than guessed.
+
+The >=2x wall-clock claim is only *checked* on machines with >= 4 cores
+(the acceptance environment); on smaller containers the measured ratio
+is recorded as an informational note — 2 workers on 2 busy cores cannot
+reach 2x by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from benchmarks.common import Claims, calibration_score, paired_ab, write_json
+
+from repro.shard import (ShardedRunConfig, lookahead_of,
+                         non_telemetry_metrics as _metrics, run_sharded)
+
+REFERENCE = dict(protocol="woc", n_groups=8, n_replicas_per_group=5,
+                 n_clients_per_group=2, batch_size=10, locality="uniform",
+                 seed=3)
+BASE_OPS = 12_000          # per group (matches bench_shard_scaling)
+QUICK_OPS = 3_000
+SPEEDUP_TARGET = 2.0       # on a >= 4-core runner
+MIN_CORES_FOR_CLAIM = 4
+
+
+def run_bench(out_dir, quick: bool = False, jobs: int = 0) -> list[str]:
+    claims = Claims()
+    cores = os.cpu_count() or 1
+    ops_per_group = QUICK_OPS if quick else BASE_OPS
+    repeats = 2 if quick else 3
+    cfg = dict(REFERENCE, total_ops=ops_per_group * REFERENCE["n_groups"])
+    workers = jobs if jobs > 0 else min(cfg["n_groups"], cores)
+
+    serial_cfg = ShardedRunConfig(**cfg, workers=1)
+    parallel_cfg = ShardedRunConfig(**cfg, workers=workers)
+
+    # determinism first (also warms both paths for the A/B below)
+    serial = run_sharded(serial_cfg).result
+    parallel = run_sharded(parallel_cfg).result
+    identical = _metrics(serial) == _metrics(parallel)
+    claims.check(
+        "parallel (workers>=2) bit-identical to serial oracle on the "
+        f"G={cfg['n_groups']} reference",
+        identical,
+        f"workers={parallel.workers} committed={parallel.committed_ops} "
+        f"tx_s={parallel.throughput_tx_s:.0f} "
+        + ("all non-telemetry fields equal" if identical
+           else "FIELDS DIVERGE"))
+    claims.check(
+        "per-engine telemetry populated (barriers, idle-wait, engines)",
+        parallel.barriers > 0 and len(parallel.per_engine)
+        == cfg["n_groups"],
+        f"barriers={parallel.barriers} "
+        f"idle_wait_frac={parallel.idle_wait_frac:.3f} "
+        f"engines={len(parallel.per_engine)}")
+
+    # paired interleaved A/B wall clock (shared harness; no warmup run —
+    # the determinism pass above already warmed both paths)
+    probe = calibration_score()
+    ab = paired_ab(lambda: run_sharded(serial_cfg),
+                   lambda: run_sharded(parallel_cfg),
+                   repeats=repeats, warmup=False)
+    headline = (f"parallel >= {SPEEDUP_TARGET:.0f}x serial wall-clock on "
+                f"the G={cfg['n_groups']} uniform reference")
+    detail = (f"serial median {ab['a_median_s']:.2f}s vs parallel "
+              f"{ab['b_median_s']:.2f}s = {ab['ratio']:.2f}x "
+              f"({workers} workers, {cores} cores)")
+    if quick or cores < MIN_CORES_FOR_CLAIM:
+        claims.note(
+            headline + f" [informational: {cores} cores"
+            + (", quick" if quick else "") + "]", detail)
+    else:
+        claims.check(headline, ab["ratio"] >= SPEEDUP_TARGET, detail)
+
+    write_json(out_dir, "BENCH_parallel", {
+        "bench": "parallel_shard",
+        "scenario": dict(cfg),
+        "quick": quick,
+        "repeats": repeats,
+        "workers": workers,
+        "cores": cores,
+        "lookahead_s": lookahead_of(serial_cfg.costs),
+        "paired_ab": ab,
+        "speedup": ab["ratio"],
+        "calibration_probe": round(probe, 1),
+        "serial": {
+            "committed_ops": serial.committed_ops,
+            "throughput_tx_s": round(serial.throughput_tx_s, 1),
+            "events": serial.events,
+            "wall_s": round(serial.wall_s, 3),
+        },
+        "parallel": {
+            "committed_ops": parallel.committed_ops,
+            "throughput_tx_s": round(parallel.throughput_tx_s, 1),
+            "events": parallel.events,
+            "barriers": parallel.barriers,
+            "idle_wait_frac": round(parallel.idle_wait_frac, 4),
+            "per_engine": [dataclasses.asdict(e)
+                           for e in parallel.per_engine],
+        },
+        "bit_identical": identical,
+        "claims": claims.lines,
+    })
+    return claims.lines
+
+
+# benchmarks/run.py invokes ``mod.run(out_dir, quick=..., jobs=...)``
+run = run_bench  # noqa: F811 — intentional module-entrypoint alias

@@ -1,6 +1,7 @@
 """Benchmark driver: one module per paper table/figure + beyond-paper
 benches. Writes CSVs to experiments/bench/ and prints a paper-claim
-validation summary. ``python -m benchmarks.run [--quick] [--only NAME]``
+validation summary.
+``python -m benchmarks.run [--quick] [--only NAME] [--jobs N]``
 
 ``--quick`` threads a reduced-size mode through every suite (smaller
 sweeps, fewer ops/batches/trials) so CI smoke steps and laptops can run
@@ -15,14 +16,15 @@ exception — its claims are sized to hold in quick mode (CI runs
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
 from benchmarks import (bench_batch_size, bench_client_scaling,
                         bench_conflict_rate, bench_engine,
-                        bench_grad_quorum, bench_quorum_kernel,
-                        bench_server_scaling, bench_shard_scaling,
-                        bench_weights)
+                        bench_grad_quorum, bench_parallel_shard,
+                        bench_quorum_kernel, bench_server_scaling,
+                        bench_shard_scaling, bench_weights)
 
 SUITES = [
     ("engine", bench_engine),
@@ -34,6 +36,7 @@ SUITES = [
     ("client_scaling", bench_client_scaling),
     ("server_scaling", bench_server_scaling),
     ("shard_scaling", bench_shard_scaling),
+    ("parallel", bench_parallel_shard),
 ]
 
 
@@ -44,6 +47,10 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true",
                     help="reduced batches/clients/sweeps in every suite "
                          "(CI smoke / laptop mode)")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="worker processes for parallel-simulation suites "
+                         "(0 = auto: min(groups, cores)); suites that do "
+                         "not take a jobs parameter ignore it")
     args = ap.parse_args()
 
     all_lines = []
@@ -53,7 +60,10 @@ def main() -> int:
             continue
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
-        lines = mod.run(args.out, quick=args.quick)
+        kwargs = {"quick": args.quick}
+        if "jobs" in inspect.signature(mod.run).parameters:
+            kwargs["jobs"] = args.jobs
+        lines = mod.run(args.out, **kwargs)
         for ln in lines:
             print("  " + ln, flush=True)
         print(f"  ({time.time()-t0:.0f}s)", flush=True)

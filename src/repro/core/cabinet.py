@@ -40,6 +40,9 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
                 if op.commit_time < 0:
                     op.commit_time = now
                     op.path = op.path or "slow"
+                    commit_log = self.sim.commit_log
+                    if op.op_id not in commit_log:
+                        commit_log[op.op_id] = (now, op.path)
                 self.credit_op(msg.src, bid, op.op_id)
                 continue
             rec["remaining"].add(op.op_id)
@@ -65,6 +68,9 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
         if op.commit_time < 0:
             op.commit_time = now
             op.path = path
+            commit_log = self.sim.commit_log
+            if op.op_id not in commit_log:
+                commit_log[op.op_id] = (now, path)
         rec = self.pending.get(bid)
         if rec is None:
             return

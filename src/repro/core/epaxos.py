@@ -57,6 +57,9 @@ class EPaxosReplica(BaseReplica):
                 if op.commit_time < 0:
                     op.commit_time = now
                     op.path = op.path or "fast"
+                    commit_log = self.sim.commit_log
+                    if op.op_id not in commit_log:
+                        commit_log[op.op_id] = (now, op.path)
                 self.credit_op(msg.src, msg.payload["batch_id"], op.op_id)
             self.flush_credits()
             ops = [op for op in ops if op.op_id not in self.rsm.applied_ops]
@@ -115,12 +118,15 @@ class EPaxosReplica(BaseReplica):
         c = self.sim.costs
         self.sim.busy(self.node_id,
                       c.c_apply * len(ops) * c.speed(self.node_id))
+        commit_log = self.sim.commit_log
         for op in ops:
             self.rsm.apply(op)
             self.clear_inflight(op.obj, op.op_id)
             if op.commit_time < 0:
                 op.commit_time = now
                 op.path = "fast" if not op.path else op.path
+                if op.op_id not in commit_log:
+                    commit_log[op.op_id] = (now, op.path)
         others = [r for r in range(self.sim.n) if r != self.node_id]
         self.broadcast(others, "epx_commit", {"ops": ops},
                        size_ops=len(ops))

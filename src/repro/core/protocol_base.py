@@ -39,7 +39,9 @@ class ObjectWeightTable:
     def __init__(self, n: int, r: float, node_ema: np.ndarray,
                  decay: float = 0.85):
         self.n = n
-        self.base = np.asarray(W.geometric_weights(n, r))  # descending by rank
+        # numpy twin of the jax weight kernel: the simulator path must not
+        # execute jax (forked parallel-shard workers — see weights.py)
+        self.base = W.geometric_weights_np(n, r)           # descending by rank
         self.half_sum = float(self.base.sum()) / 2.0
         self.decay = decay
         # per-object EMAs are plain float lists: element updates in

@@ -40,9 +40,39 @@ Engine notes (PR 2 hot-path overhaul):
     :class:`TimerHandle`; cancelled timers die lazily when popped instead
     of dispatching into node code (client retry timers are the big win).
   * Per-node service state (busy-until, send/recv/parse costs, one-way
-    delay bases) lives in flat lists indexed by node id, not dicts, and
-    ``_link_last`` is pruned of inactive entries so long drift/migration
-    runs don't grow it without bound.
+    delay bases) lives in flat lists indexed by node id, not dicts.
+
+Engine notes (PR 3 parallel-simulation refactor):
+
+  * **EventEngine extraction.** The event loop proper — heap, timers,
+    per-node service state, per-link FIFO/jitter records — is
+    :class:`EventEngine`, with no assumption that it hosts *every* node
+    in the simulated deployment. :class:`Simulation` (one engine hosting
+    everything — the single-heap oracle) subclasses it unchanged;
+    :mod:`repro.shard.parallel` composes one engine per consensus group
+    across worker processes, synchronized by conservative time windows.
+  * **Per-link jitter sequence.** The jitter coordinate ``seq`` is now
+    the count of prior messages on the same (src, dst) link, not a
+    simulation-global message counter. A global counter depends on how
+    independent groups' events interleave in one heap — exactly what a
+    partitioned run does not reproduce — while a link-local count is a
+    pure function of the sender's own deterministic execution. This is
+    the property that makes serial and parallel sharded runs
+    bit-identical, and it re-keys the jitter stream: every
+    jitter-sensitive recorded number was re-baselined once in this PR
+    (the same one-time cost PR 2 paid for the splitmix64 switch).
+  * **Partitioned mode.** :meth:`EventEngine.configure_partition` marks
+    foreign nodes; ``post()`` computes arrival times for them as usual
+    (sender-side state only: busy charge, link FIFO, jitter) but diverts
+    the message to ``outbox`` instead of the heap. The orchestrator
+    routes outboxes between engines at window barriers and feeds them to
+    :meth:`EventEngine.inject`. ``run(until=...)`` is window-exact: an
+    event past ``until`` is pushed back, not dropped.
+  * **Commit log.** Protocol stamp sites record ``(commit_time, path)``
+    per op id in ``EventEngine.commit_log`` (earliest stamp wins). In a
+    one-engine run this mirrors the in-place ``Op`` stamping exactly; in
+    a partitioned run it is what makes commit metadata collectable even
+    though a cross-engine ``Op`` reference is a pickled copy.
 
 Entity ids: replicas are ``0..n-1``; clients are ``n..n+m-1``.
 """
@@ -126,9 +156,13 @@ def hash_jitter_u01(seed: int, src: int, dst: int, seq: int) -> float:
     """Canonical per-message jitter sample in [0,1).
 
     This is THE timing-critical hash: every network delay in the simulator
-    adds ``hash_jitter_u01(seed, src, dst, msg_seq) * net_jitter``.
-    tests/test_engine.py pins golden values so refactors cannot silently
-    shift simulated timing (which would invalidate recorded baselines).
+    adds ``hash_jitter_u01(seed, src, dst, link_seq) * net_jitter``, where
+    ``link_seq`` counts prior messages on the same (src, dst) link — a
+    pure function of the sender's deterministic execution, which is what
+    lets per-group engines reproduce the exact timing of the single-heap
+    simulation (see module docstring). tests/test_engine.py pins golden
+    values so refactors cannot silently shift simulated timing (which
+    would invalidate recorded baselines).
     """
     return _jitter((seed * _SEED_MULT) & _U64, src, dst, seq)
 
@@ -219,13 +253,17 @@ class Node:
 _ARRIVE, _PROC, _TIMER, _CRASH, _RECOVER = 0, 1, 2, 3, 4
 
 
-class Simulation:
-    """Event loop with FIFO service queues and deterministic jitter."""
+class EventEngine:
+    """Event loop with FIFO service queues and deterministic jitter.
 
-    # prune _link_last when it holds this many entries (amortized: the cap
-    # doubles to the live size after each prune, so a genuinely large
-    # active link set doesn't rescan per message)
-    LINK_TABLE_PRUNE = 4096
+    A self-contained engine: heap + timers + per-node service state. By
+    default it hosts every node of the deployment (:class:`Simulation`);
+    with :meth:`configure_partition` it hosts one shard of the node space
+    and exchanges boundary messages through ``outbox`` / :meth:`inject`
+    (driven by :mod:`repro.shard.parallel` at conservative time-window
+    barriers).
+    """
+
     # pause the cyclic GC inside run(): the event loop allocates heavily
     # (messages, heap tuples, payloads) against a large live heap, so
     # generational collections burn 10-20% of wall time scanning objects
@@ -253,7 +291,6 @@ class Simulation:
         self.nodes: Dict[int, Node] = {}
         self._heap: List[tuple] = []
         self._seq = 0
-        self._msg_seq = 0
         self._seed_term = (seed * _SEED_MULT) & _U64
         self._jit_scale = self.costs.net_jitter * _INV_2_64
         # flat per-node service state (rebuilt lazily when nodes change)
@@ -264,16 +301,82 @@ class Simulation:
         self._parse_c: List[float] = []
         self._delay_base: List[List[float]] = []
         self._tables_ok = False
-        self._link_last: Dict[int, float] = {}  # FIFO per link (src<<24|dst)
-        self._link_cap = self.LINK_TABLE_PRUNE
+        # per-link state, keyed src<<24|dst: [next jitter seq, last arrival].
+        # The seq half is the jitter coordinate and must never reset (the
+        # stream is a pure function of link history); the arrival half is
+        # the per-link FIFO floor. Size is bounded by live (src, dst)
+        # pairs, not message count, so no pruning is needed.
+        self._links: Dict[int, list] = {}
         self.crashed: set[int] = set()
         self.clients_done = 0          # bumped by Client on completion
+        # op_id -> (commit_time, path): earliest protocol stamp, written
+        # next to every ``op.commit_time = now`` site (metrics substrate
+        # for partitioned runs; mirrors Op stamping in one-engine runs)
+        self.commit_log: Dict[int, tuple] = {}
+        # partitioned mode (None/inactive for plain Simulation): foreign
+        # lookup table, boundary outbox, and the current window's post
+        # event-times (for exact-stop message accounting — see parallel.py)
+        self._foreign: Optional[List[bool]] = None
+        self._n_nodes_hint = 0
+        self.outbox: List[tuple] = []
+        self._post_log: Optional[List[float]] = None
         # engine telemetry (surfaced in RunResult / bench_engine)
         self.stats_messages = 0
         self.stats_events = 0
         self.stats_collapsed = 0       # arrive+proc pairs run inline
         self.heap_peak = 0
         self.wall_s = 0.0
+
+    # -- partitioned mode -----------------------------------------------------
+
+    def configure_partition(self, is_local, n_nodes: int) -> None:
+        """Mark this engine as one shard of a partitioned deployment.
+
+        ``is_local(node_id)`` says whether this engine hosts the node;
+        posts to foreign nodes are fully timed sender-side (busy charge,
+        link FIFO, per-link jitter) and appended to ``outbox`` as
+        ``(arrive_time, msg)`` instead of entering the heap. ``n_nodes``
+        sizes the cost tables for the whole deployment so delay bases to
+        foreign destinations resolve.
+        """
+        self._foreign = [not is_local(i) for i in range(n_nodes)]
+        self._n_nodes_hint = n_nodes
+        self._post_log = []
+        self._tables_ok = False
+
+    def inject(self, arrive: float, msg: Msg) -> None:
+        """Deliver a boundary message computed by a peer engine: it enters
+        this engine's heap at the sender-computed arrival time. The
+        conservative window protocol must never deliver into this
+        engine's past — enforced here so a lookahead bug fails loudly
+        instead of silently dragging the clock backwards."""
+        if arrive < self.now:
+            raise RuntimeError(
+                f"causality violation: boundary message for node "
+                f"{msg.dst} arrives at {arrive:.9f} but engine clock is "
+                f"already at {self.now:.9f} (window lookahead too large)")
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (arrive, seq, _ARRIVE, msg))
+
+    def next_event_time(self) -> float:
+        return self._heap[0][0] if self._heap else float("inf")
+
+    def begin_window(self) -> None:
+        """Start a new window: reset the window-local post log (posts from
+        earlier windows can never land past a stop time inside this one)."""
+        if self._post_log is not None:
+            self._post_log.clear()
+
+    def drain_outbox(self) -> List[tuple]:
+        out, self.outbox = self.outbox, []
+        return out
+
+    def posts_after(self, t: float) -> int:
+        """How many messages this engine posted during events strictly
+        after ``t`` in the current window (exact-stop truncation)."""
+        log = self._post_log
+        return sum(1 for x in log if x > t) if log else 0
 
     # -- wiring --------------------------------------------------------------
 
@@ -322,6 +425,9 @@ class Simulation:
         to locals for speed, so a mid-run rebuild (a node added by a
         handler) must stay visible to the live event loop."""
         size = (max(self.nodes) + 1) if self.nodes else 0
+        if self._n_nodes_hint > size:
+            size = self._n_nodes_hint   # partitioned: table rows for
+                                        # foreign destinations too
         c = self.costs
         self._nodes[:] = (self.nodes.get(i) for i in range(size))
         self._busy[:] = [self._busy[i] if i < len(self._busy) else 0.0
@@ -368,8 +474,18 @@ class Simulation:
         now = self.now
         send_done = (t if t > now else now) + self._send_c[src]
         b[src] = send_done
-        mseq = self._msg_seq
-        self._msg_seq = mseq + 1
+        # per-link record: [next jitter seq, last arrival]. The jitter
+        # coordinate is the count of prior messages on this link — a pure
+        # function of the sender's own execution, NOT of how unrelated
+        # engines' events interleave (the bit-identity keystone for
+        # partitioned runs). Links key as src<<24|dst: int dict ops beat
+        # tuple keys.
+        link = (src << 24) | dst
+        rec = self._links.get(link)
+        if rec is None:
+            rec = self._links[link] = [0, 0.0]
+        mseq = rec[0]
+        rec[0] = mseq + 1
         # splitmix64 jitter, inlined (see hash_jitter_u01)
         x = (self._seed_term + src * _SRC_MULT + dst * _DST_MULT + mseq) \
             & _U64
@@ -379,30 +495,21 @@ class Simulation:
             + ((x ^ (x >> 31)) & _U64) * self._jit_scale
         # per-link FIFO delivery (TCP semantics): messages on one connection
         # never reorder, which real protocol implementations rely on.
-        # Links key as src<<24|dst: int dict ops beat tuple keys.
-        link = (src << 24) | dst
-        ll = self._link_last
-        last = ll.get(link)
-        if last is not None and arrive < last + 1e-9:
+        last = rec[1]
+        if arrive < last + 1e-9:
             arrive = last + 1e-9
-        ll[link] = arrive
-        if len(ll) >= self._link_cap:
-            self._prune_links()
+        rec[1] = arrive
+        self.stats_messages += 1
+        log = self._post_log
+        if log is not None:
+            log.append(now)
+        fo = self._foreign
+        if fo is not None and fo[dst]:
+            self.outbox.append((arrive, msg))
+            return
         seq = self._seq
         self._seq = seq + 1
         heapq.heappush(self._heap, (arrive, seq, _ARRIVE, msg))
-        self.stats_messages += 1
-
-    def _prune_links(self) -> None:
-        """Drop link-FIFO entries that can no longer constrain an arrival
-        (every future arrival lands strictly after ``now``), then double
-        the prune threshold to the live size so a large *active* link set
-        doesn't rescan on every post."""
-        now = self.now
-        self._link_last = {k: v for k, v in self._link_last.items()
-                           if v > now}
-        self._link_cap = max(self.LINK_TABLE_PRUNE,
-                             2 * len(self._link_last))
 
     def set_timer(self, node_id: int, delay: float, name: str,
                   payload: dict) -> TimerHandle:
@@ -464,8 +571,11 @@ class Simulation:
                     break
                 if not (events & 255) and len(heap) > peak:
                     peak = len(heap)        # sampled (cheap, ~exact)
-                t, _, kind, item = pop(heap)
+                t, eseq, kind, item = pop(heap)
                 if t > until:
+                    # window-exact: the event stays queued for the next
+                    # run() call (parallel engines advance in windows)
+                    push(heap, (t, eseq, kind, item))
                     self.now = until
                     break
                 self.now = t
@@ -519,6 +629,12 @@ class Simulation:
             self.heap_peak = peak
             self.wall_s += time.perf_counter() - t_wall
         return self.now
+
+
+class Simulation(EventEngine):
+    """One engine hosting the entire deployment: the single-heap
+    simulation every flat experiment runs on, and the ``workers=1``
+    oracle the parallel sharded runner is pinned bit-identical to."""
 
 
 # ---------------------------------------------------------------------------
@@ -585,6 +701,7 @@ class Client(Node):
         self._next_batch = 0
         self.value_seed = value_seed
         self._done = False
+        self.done_time = -1.0        # sim time of the completing ack
         self._suspect: Dict[int, float] = {}   # replica -> suspicion expiry
         # client-global ack dedup: an op may be credited more than once
         # (retries reaching two coordinators; in sharded runs the old and
@@ -678,6 +795,7 @@ class Client(Node):
         if not self._done and self.completed_ops >= \
                 self.total * self.batch_size:
             self._done = True
+            self.done_time = now
             self.sim.clients_done += 1
         self._maybe_submit()
 

@@ -87,6 +87,8 @@ class SlowPathMixin:
         op2batch = self.op2batch
         pending = self.pending
         credit_buf = self._credit_buf
+        commit_log = self.sim.commit_log
+        stamp = (now, path)
         for op in ops:
             op_id = op.op_id
             if forwarded:
@@ -99,6 +101,8 @@ class SlowPathMixin:
             if op.commit_time < 0:
                 op.commit_time = now
                 op.path = path
+                if op_id not in commit_log:
+                    commit_log[op_id] = stamp
             rec = pending.get(bid)
             if rec is None:
                 continue

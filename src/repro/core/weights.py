@@ -47,6 +47,23 @@ def geometric_weights(n: int, r: float, dtype=jnp.float32) -> jax.Array:
     return jnp.power(jnp.asarray(r, dtype=dtype), exponents)
 
 
+def geometric_weights_np(n: int, r: float,
+                         dtype=np.float32) -> np.ndarray:
+    """Pure-numpy twin of :func:`geometric_weights` for the event-driven
+    simulator's replica constructors: the discrete-event path must stay
+    free of jax *execution* so the parallel sharded runner can fork
+    worker processes without inheriting XLA runtime state (jax documents
+    fork as unsupported once a backend client exists)."""
+    if n < 1:
+        raise ValueError(f"need at least one replica, got n={n}")
+    if not (R_MIN <= r <= R_MAX):
+        raise ValueError(f"steepness r={r} outside paper range [{R_MIN}, {R_MAX}]")
+    exponents = np.arange(n - 1, -1, -1, dtype=np.float64)
+    if (n - 1) * np.log(max(r, 1.0 + 1e-12)) > 60.0:
+        exponents = exponents - (n - 1)
+    return np.power(np.float64(r), exponents).astype(dtype)
+
+
 def consensus_threshold(weights: jax.Array) -> jax.Array:
     """T = sum(w)/2 over the last axis (paper §3.1)."""
     return jnp.sum(weights, axis=-1) / 2.0

@@ -51,6 +51,9 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
                 if op.commit_time < 0:                 # committed op whose
                     op.commit_time = now               # coordinator died
                     op.path = op.path or "slow"        # before stamping it
+                    commit_log = self.sim.commit_log
+                    if op_id not in commit_log:
+                        commit_log[op_id] = (now, op.path)
                 self.credit_op(msg.src, bid, op_id)
                 continue
             remaining.add(op_id)
@@ -106,6 +109,9 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
         if op.commit_time < 0:
             op.commit_time = now
             op.path = path
+            commit_log = self.sim.commit_log
+            if op_id not in commit_log:
+                commit_log[op_id] = (now, path)
         rec = self.pending.get(bid)
         if rec is None:
             return

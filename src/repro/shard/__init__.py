@@ -14,16 +14,22 @@ Public surface:
   * router     — ShardClient + ShardWorkload: owner-aware batch routing,
                  redirect handling, steal hints, locality modes
   * runner     — ShardedRunConfig / run_sharded / ShardedRunResult
+  * parallel   — per-group EventEngines over worker processes with
+                 conservative time-window sync (workers>=2; bit-identical
+                 metrics to the workers=1 serial oracle)
 """
 
 from repro.shard.gate import GroupGate, make_sharded_replica
 from repro.shard.groupview import GroupNodeProxy, GroupView
 from repro.shard.router import ShardClient, ShardWorkload
-from repro.shard.runner import (ShardedRunArtifacts, ShardedRunConfig,
-                                ShardedRunResult, run_sharded)
+from repro.shard.runner import (TELEMETRY_FIELDS, EngineStats,
+                                ShardedRunArtifacts, ShardedRunConfig,
+                                ShardedRunResult, lookahead_of,
+                                non_telemetry_metrics, run_sharded)
 from repro.shard.shard_map import ShardMap, resolve_owner
 
 __all__ = ["GroupGate", "make_sharded_replica", "GroupNodeProxy",
            "GroupView", "ShardClient", "ShardWorkload",
            "ShardedRunArtifacts", "ShardedRunConfig", "ShardedRunResult",
-           "run_sharded", "ShardMap", "resolve_owner"]
+           "run_sharded", "ShardMap", "resolve_owner", "EngineStats",
+           "TELEMETRY_FIELDS", "lookahead_of", "non_telemetry_metrics"]

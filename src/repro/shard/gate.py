@@ -75,12 +75,29 @@ class GroupGate:
         self.migrations_out = 0
         self.migration_log: List[Tuple[int, int, int, int]] = []
         # (obj, from_group, to_group, epoch)
+        # parallel runs set this to a list: counter bumps are journaled as
+        # (event_time, field, delta) for the current time window so the
+        # orchestrator can truncate the final window to the exact serial
+        # stop time T* (see repro.shard.parallel). None in serial runs.
+        self.journal = None
 
-    def admit(self, op: Op) -> None:
+    def truncate_after(self, t: float) -> None:
+        """Undo journaled counter bumps from events after ``t`` (the
+        serial engine never processes them: it stops at T* exactly)."""
+        if not self.journal:
+            return
+        for tt, field, delta in self.journal:
+            if tt > t:
+                setattr(self, field, getattr(self, field) - delta)
+        self.journal.clear()
+
+    def admit(self, op: Op, now: float) -> None:
         s = self.admitted.setdefault(op.obj, set())
         if op.op_id not in s:
             s.add(op.op_id)
             self.ops_admitted += 1
+            if self.journal is not None:
+                self.journal.append((now, "ops_admitted", 1))
 
     def gate_replica_global(self) -> int:
         return self.group * self.size
@@ -146,11 +163,15 @@ class _ShardGateMixin:
                 if not any(b[2].op_id == op.op_id for b in buf):
                     buf.append((msg.src, bid, op))
                     g.fenced_ops += 1
+                    if g.journal is not None:
+                        g.journal.append((now, "fenced_ops", 1))
             else:
-                g.admit(op)
+                g.admit(op, now)
                 mine.append(op)
         if redirects:
             g.redirects += len(redirects)
+            if g.journal is not None:
+                g.journal.append((now, "redirects", len(redirects)))
             self.send(msg.src, "shard_redirect",
                       {"batch_id": bid, "redirects": redirects})
         if mine:
@@ -169,6 +190,8 @@ class _ShardGateMixin:
             return
         g.stealing[obj] = msg.payload.get("client", -1)
         g.steals_started += 1
+        if g.journal is not None:
+            g.journal.append((now, "steals_started", 1))
         self._shard_send(grp * g.size, "shard_steal_req",
                          {"obj": obj, "group": g.group, "epoch_seen": ep,
                           "from": self._gid()})
@@ -185,6 +208,8 @@ class _ShardGateMixin:
                        size_ops=len(p["op_ids"]))
         g.map.record(obj, g.group, p["epoch"])
         g.migrations_in += 1
+        if g.journal is not None:
+            g.journal.append((now, "migrations_in", 1))
         if hinter is not None and hinter >= 0:
             self.send(hinter, "shard_owner_update",
                       {"updates": [(obj, g.group, p["epoch"])]})
@@ -194,6 +219,8 @@ class _ShardGateMixin:
         p = msg.payload
         g.stealing.pop(p["obj"], None)
         g.steal_nacks += 1
+        if g.journal is not None:
+            g.journal.append((now, "steal_nacks", 1))
         g.map.record(p["obj"], p["group"], p["epoch"])
 
     def on_shard_install(self, msg: Msg, now: float) -> None:
@@ -289,6 +316,8 @@ class _ShardGateMixin:
         g.map.unfence(obj)
         g.resteal_ok[obj] = now + g.steal_cooldown
         g.migrations_out += 1
+        if g.journal is not None:
+            g.journal.append((now, "migrations_out", 1))
         g.migration_log.append((obj, g.group, rec["group"], epoch))
         om = getattr(self, "om", None)
         if om is not None:
@@ -301,6 +330,8 @@ class _ShardGateMixin:
                     (op.op_id, op.obj, rec["group"], epoch))
             for (client, bid), rds in by_batch.items():
                 g.fenced_replayed += len(rds)
+                if g.journal is not None:
+                    g.journal.append((now, "fenced_replayed", len(rds)))
                 self.send(client, "shard_redirect",
                           {"batch_id": bid, "redirects": rds})
 

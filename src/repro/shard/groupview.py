@@ -35,6 +35,7 @@ class GroupView:
         self.base = group * size
         self.costs = root.costs
         self.seed = root.seed
+        self.commit_log = root.commit_log   # shared engine-wide stamp log
 
     # -- Simulation-compatible surface (what protocol code touches) ---------
 

@@ -1,22 +1,41 @@
-"""Sharded experiment runner: G independent WOC groups, one event loop.
+"""Sharded experiment runner: G independent WOC groups, serial or parallel.
 
 ``run_sharded`` builds ``n_groups`` consensus groups (each an unmodified
 protocol cluster behind a shard gate) over a hash-partitioned object
 space, homes ``n_clients_per_group`` router clients at each group, and
-drives the whole deployment inside one deterministic simulation. With
-``n_groups=1`` it reduces to :func:`repro.core.runner.run` (same cost
-model, same id layout, no redirects or migrations) — the G=1 equivalence
-tests pin that.
+drives the whole deployment deterministically. With ``n_groups=1`` it
+reduces to :func:`repro.core.runner.run` (same cost model, same id
+layout, no redirects or migrations) — the G=1 equivalence tests pin that.
+
+Execution modes (``ShardedRunConfig.workers``):
+
+  * ``1`` — the single-heap serial engine: every group's events share one
+    :class:`Simulation`. This is the oracle.
+  * ``>= 2`` — conservative parallel discrete-event simulation
+    (:mod:`repro.shard.parallel`): one :class:`EventEngine` per group,
+    spread over worker processes, synchronized by time windows of the
+    minimum cross-group link latency. Produces **bit-identical**
+    ShardedRunResult metrics to the serial engine (pinned by
+    tests/test_parallel.py) — see parallel.py for why.
+  * ``0`` — auto: ``min(n_groups, cpu_count)``.
+
+The builder helpers (:func:`make_gate`, :func:`build_group`,
+:func:`build_client`) and the metric assembler (:func:`assemble_result`)
+are shared verbatim by both modes, so the only thing that can differ
+between them is event *scheduling* — which the per-link jitter sequence
+makes irrelevant to timing (see repro.core.simulator module notes).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.runner import PROTOCOLS
-from repro.core.simulator import (CostModel, Simulation, Workload,
-                                  collect_metrics)
+from repro.core.simulator import CostModel, Simulation, Workload
 from repro.shard.gate import GroupGate, make_sharded_replica
 from repro.shard.groupview import GroupNodeProxy, GroupView
 from repro.shard.router import ShardClient, ShardWorkload
@@ -43,6 +62,9 @@ class ShardedRunConfig:
     costs: CostModel = dataclasses.field(default_factory=CostModel)
     seed: int = 0
     sim_time_cap: float = 300.0
+    # 1 = serial single-heap oracle; >=2 = parallel per-group engines over
+    # that many worker processes; 0 = auto (min(n_groups, cpu_count))
+    workers: int = 1
 
 
 @dataclasses.dataclass
@@ -55,6 +77,17 @@ class ShardGroupStats:
     migrations_out: int
     steals_started: int
     steal_nacks: int
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Per-group engine telemetry of a parallel run (wall-clock side)."""
+    group: int
+    events: int
+    wall_s: float
+    events_per_sec: float
+    messages: int
+    heap_peak: int
 
 
 @dataclasses.dataclass
@@ -79,11 +112,17 @@ class ShardedRunResult:
     remote_frac: float                 # dispatches to a non-home group
     steal_hints: int
     per_group: List[ShardGroupStats] = dataclasses.field(default_factory=list)
-    # engine telemetry (wall-clock side — excluded from determinism checks)
+    # engine telemetry (wall-clock side — excluded from determinism checks;
+    # see TELEMETRY_FIELDS)
     events: int = 0
     events_per_sec: float = 0.0
     wall_s: float = 0.0
     heap_peak: int = 0
+    workers: int = 1
+    barriers: int = 0                  # parallel: time-window sync count
+    idle_wait_frac: float = 0.0        # parallel: worker time blocked at
+                                       # window barriers / total worker time
+    per_engine: List[EngineStats] = dataclasses.field(default_factory=list)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_groups},{self.group_size},"
@@ -94,95 +133,235 @@ class ShardedRunResult:
                 f"{self.remote_frac:.4f}")
 
 
+# wall-clock-side fields: identical workloads on different machines (or
+# worker counts) legitimately differ here — everything else is pinned
+# bit-identical between serial and parallel runs
+TELEMETRY_FIELDS = {"events", "events_per_sec", "wall_s", "heap_peak",
+                    "workers", "barriers", "idle_wait_frac", "per_engine"}
+
+
+def non_telemetry_metrics(result: "ShardedRunResult") -> dict:
+    """The determinism-contract view of a result: every field except
+    wall-clock telemetry. The single definition of "bit-identical" used
+    by tests/test_parallel.py and bench_parallel_shard."""
+    d = dataclasses.asdict(result)
+    for k in TELEMETRY_FIELDS:
+        d.pop(k)
+    return d
+
+
 @dataclasses.dataclass
 class ShardedRunArtifacts:
     result: ShardedRunResult
-    sim: Simulation
-    replicas: List[List[object]]       # [group][local] protocol replicas
+    sim: Optional[Simulation]          # None for parallel runs (state lives
+    replicas: List[List[object]]       # in worker processes); [] likewise
     gates: List[GroupGate]
     clients: List[ShardClient]
 
 
-def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
+@dataclasses.dataclass
+class ClientRow:
+    """Client-side metric record (what assemble_result needs per client).
+
+    ``ops`` is [(op_id, submit_time)] in creation order; commit metadata
+    comes from the engines' commit logs, NOT from Op objects — a
+    cross-engine Op reference is a pickled copy, so in-place replica
+    stamping is not observable across engines (see simulator commit_log).
+    """
+    node_id: int
+    ops: List[tuple]
+    redirected_ops: int
+    remote_ops: int
+    hints_sent: int
+    done_time: float
+
+
+# ---------------------------------------------------------------------------
+# Shared builders (serial and parallel construct identical deployments)
+# ---------------------------------------------------------------------------
+
+def resolve_workers(cfg: ShardedRunConfig) -> int:
+    w = cfg.workers
+    if w == 0:
+        w = os.cpu_count() or 1
+    return max(1, min(w, cfg.n_groups))
+
+
+def client_home_map(cfg: ShardedRunConfig) -> Dict[int, int]:
+    """client global id -> home group. Client ci is homed at group ci % G:
+    every group hosts the same client population, and with G=1 ids
+    collapse onto the flat layout."""
     G, npg = cfg.n_groups, cfg.n_replicas_per_group
     n_clients = G * cfg.n_clients_per_group
-    # client ci is homed at group ci % G: every group hosts the same
-    # client population, and with G=1 ids collapse onto the flat layout
-    client_home = {G * npg + ci: ci % G for ci in range(n_clients)}
-    sim = Simulation(G * npg, cfg.costs, seed=cfg.seed, group_size=npg,
-                     client_home=client_home)
+    return {G * npg + ci: ci % G for ci in range(n_clients)}
 
+
+def lookahead_of(costs: CostModel, allow_steal: bool = True) -> float:
+    """Conservative-sync lookahead: the minimum one-way delay base of any
+    cross-group link. Every boundary message pays at least this much on
+    top of its send time — jitter, per-node distance and sender occupancy
+    only add — so an engine that has seen every peer event up to T cannot
+    receive anything new before T + lookahead.
+
+    Cross-group replica<->replica messages exist only in the object-steal
+    flow (steal req/nack/grant; redirects and replies ride client links),
+    so with stealing disabled the lookahead widens to the client WAN hop
+    — ~3x fewer window barriers under the default cost model."""
+    client_link = costs.net_client + costs.net_remote_client
+    if not allow_steal:
+        return client_link
+    return min(costs.net_base + costs.net_cross, client_link)
+
+
+def make_gate(cfg: ShardedRunConfig, g: int, journal: bool = False) -> GroupGate:
+    gate = GroupGate(g, cfg.n_groups, cfg.n_replicas_per_group,
+                     seed=cfg.seed, steal_cooldown=cfg.steal_cooldown)
+    if journal:
+        gate.journal = []
+    return gate
+
+
+def build_group(sim, cfg: ShardedRunConfig, g: int,
+                gate: GroupGate) -> List[object]:
+    """Construct group ``g``'s replicas against ``sim`` (a Simulation or a
+    partitioned EventEngine) and start their heartbeats."""
+    npg = cfg.n_replicas_per_group
     cls = make_sharded_replica(PROTOCOLS[cfg.protocol])
     t = max(1, min(cfg.t_fail, (npg - 1) // 2))
-    gates = [GroupGate(g, G, npg, seed=cfg.seed,
-                       steal_cooldown=cfg.steal_cooldown) for g in range(G)]
-    replicas: List[List[object]] = []
-    for g in range(G):
-        view = GroupView(sim, g, npg)
-        grp = [cls(i, view, gate=gates[g], t_fail=t,
-                   group_cap=max(cfg.batch_size, 1)) for i in range(npg)]
-        for rep in grp:
-            sim.add_node(GroupNodeProxy(rep, view))
-            rep.start_heartbeats()
-        replicas.append(grp)
+    view = GroupView(sim, g, npg)
+    grp = [cls(i, view, gate=gate, t_fail=t,
+               group_cap=max(cfg.batch_size, 1)) for i in range(npg)]
+    for rep in grp:
+        sim.add_node(GroupNodeProxy(rep, view))
+        rep.start_heartbeats()
+    return grp
 
-    swl = ShardWorkload(locality=cfg.locality, p_local=cfg.p_local,
-                        working_set=cfg.working_set,
-                        p_working=cfg.p_working,
-                        drift_every=cfg.drift_every, base=cfg.workload)
+
+def shard_workload_of(cfg: ShardedRunConfig) -> ShardWorkload:
+    return ShardWorkload(locality=cfg.locality, p_local=cfg.p_local,
+                         working_set=cfg.working_set,
+                         p_working=cfg.p_working,
+                         drift_every=cfg.drift_every, base=cfg.workload)
+
+
+def client_batches(cfg: ShardedRunConfig, ci: int) -> int:
+    n_clients = cfg.n_groups * cfg.n_clients_per_group
     total_batches = max(1, cfg.total_ops // max(1, cfg.batch_size))
     base, rem = divmod(total_batches, n_clients)
-    clients: List[ShardClient] = []
-    for ci in range(n_clients):
-        c = ShardClient(
-            G * npg + ci, sim, protocol=cfg.protocol, n_groups=G,
-            group_size=npg, home_group=ci % G, client_index=ci // G,
-            shard_workload=swl, steal_threshold=cfg.steal_threshold,
-            map_seed=cfg.seed, batch_size=cfg.batch_size,
-            max_inflight=cfg.max_inflight,
-            total_batches=max(1, base + (1 if ci < rem else 0)),
-            value_seed=cfg.seed)
+    return max(1, base + (1 if ci < rem else 0))
+
+
+def build_client(sim, cfg: ShardedRunConfig, ci: int,
+                 swl: ShardWorkload) -> ShardClient:
+    G, npg = cfg.n_groups, cfg.n_replicas_per_group
+    return ShardClient(
+        G * npg + ci, sim, protocol=cfg.protocol, n_groups=G,
+        group_size=npg, home_group=ci % G, client_index=ci // G,
+        shard_workload=swl, steal_threshold=cfg.steal_threshold,
+        map_seed=cfg.seed, batch_size=cfg.batch_size,
+        max_inflight=cfg.max_inflight,
+        total_batches=client_batches(cfg, ci),
+        value_seed=cfg.seed)
+
+
+# ---------------------------------------------------------------------------
+# Run
+# ---------------------------------------------------------------------------
+
+def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
+    w = resolve_workers(cfg)
+    if w > 1 and cfg.n_groups > 1:
+        from repro.shard.parallel import run_sharded_parallel
+        return run_sharded_parallel(cfg, w)
+
+    G, npg = cfg.n_groups, cfg.n_replicas_per_group
+    n_clients = G * cfg.n_clients_per_group
+    sim = Simulation(G * npg, cfg.costs, seed=cfg.seed, group_size=npg,
+                     client_home=client_home_map(cfg))
+
+    gates = [make_gate(cfg, g) for g in range(G)]
+    replicas = [build_group(sim, cfg, g, gates[g]) for g in range(G)]
+
+    swl = shard_workload_of(cfg)
+    clients = [build_client(sim, cfg, ci, swl) for ci in range(n_clients)]
+    for c in clients:
         sim.add_node(c)
-        clients.append(c)
 
     for c in clients:
         c.start()
     sim.run(until=cfg.sim_time_cap, stop_when_clients_done=len(clients))
-    return ShardedRunArtifacts(
-        _collect(cfg, sim, clients, gates), sim, replicas, gates, clients)
+
+    rows = [ClientRow(c.node_id,
+                      [(op.op_id, op.submit_time) for op in c.ops],
+                      c.redirected_ops, c.remote_ops, c.hints_sent,
+                      c.done_time)
+            for c in clients]
+    gate_rows = [gate_stats(g) for g in gates]
+    result = assemble_result(
+        cfg, rows, sim.commit_log, gate_rows,
+        makespan_t=sim.now, messages=sim.stats_messages,
+        events=sim.stats_events, wall_s=sim.wall_s,
+        heap_peak=sim.heap_peak, workers=1)
+    return ShardedRunArtifacts(result, sim, replicas, gates, clients)
 
 
-def _collect(cfg: ShardedRunConfig, sim: Simulation,
-             clients: List[ShardClient],
-             gates: List[GroupGate]) -> ShardedRunResult:
-    # shared aggregation (latency percentiles, fast-path fraction, ...)
-    # comes from the single-group collector; only shard metrics are added
-    m = collect_metrics(cfg.protocol, sim, clients, cfg.batch_size,
-                        t_start=0.0)
-    committed = m.committed_ops
-    redirected = sum(c.redirected_ops for c in clients)
-    remote = sum(c.remote_ops for c in clients)
+def gate_stats(g: GroupGate) -> ShardGroupStats:
+    return ShardGroupStats(
+        group=g.group, ops_admitted=g.ops_admitted, redirects=g.redirects,
+        fenced_ops=g.fenced_ops, migrations_in=g.migrations_in,
+        migrations_out=g.migrations_out, steals_started=g.steals_started,
+        steal_nacks=g.steal_nacks)
+
+
+def assemble_result(cfg: ShardedRunConfig, client_rows: List[ClientRow],
+                    commit_log: Dict[int, tuple],
+                    gate_rows: List[ShardGroupStats], *,
+                    makespan_t: float, messages: int,
+                    events: int = 0, wall_s: float = 0.0,
+                    heap_peak: int = 0, workers: int = 1,
+                    barriers: int = 0, idle_wait_frac: float = 0.0,
+                    per_engine: Optional[List[EngineStats]] = None
+                    ) -> ShardedRunResult:
+    """Shared metric math: one code path for serial and parallel runs, so
+    identical inputs give bit-identical outputs. ``commit_log`` maps
+    op_id -> (commit_time, path) — for parallel runs the per-engine logs
+    merged earliest-stamp-first (matching the ``commit_time < 0`` stamp
+    guard on the serial engine's shared Op objects)."""
+    lat: List[float] = []
+    fast = 0
+    for row in sorted(client_rows, key=lambda r: r.node_id):
+        for op_id, submit in row.ops:
+            rec = commit_log.get(op_id)
+            if rec is not None:
+                lat.append(rec[0] - submit)
+                if rec[1] == "fast":
+                    fast += 1
+    committed = len(lat)
+    lat_ms = np.array(lat) * 1e3
+    makespan = max(makespan_t, 1e-9)
+    redirected = sum(r.redirected_ops for r in client_rows)
+    remote = sum(r.remote_ops for r in client_rows)
     return ShardedRunResult(
         protocol=cfg.protocol, n_groups=cfg.n_groups,
-        group_size=cfg.n_replicas_per_group, n_clients=len(clients),
+        group_size=cfg.n_replicas_per_group, n_clients=len(client_rows),
         batch_size=cfg.batch_size, locality=cfg.locality,
-        committed_ops=committed, makespan_s=m.makespan_s,
-        throughput_tx_s=m.throughput_tx_s,
-        latency_avg_ms=m.latency_avg_ms,
-        latency_p50_ms=m.latency_p50_ms,
-        latency_p99_ms=m.latency_p99_ms,
-        fast_path_frac=m.fast_path_frac,
-        messages=m.messages,
-        migrations=sum(g.migrations_in for g in gates),
+        committed_ops=committed, makespan_s=makespan,
+        throughput_tx_s=committed / makespan,
+        latency_avg_ms=float(lat_ms.mean()) if committed else float("nan"),
+        latency_p50_ms=(float(np.percentile(lat_ms, 50))
+                        if committed else float("nan")),
+        latency_p99_ms=(float(np.percentile(lat_ms, 99))
+                        if committed else float("nan")),
+        fast_path_frac=fast / committed if committed else 0.0,
+        messages=messages,
+        migrations=sum(g.migrations_in for g in gate_rows),
         redirected_ops=redirected,
         redirect_rate=redirected / committed if committed else 0.0,
         remote_frac=remote / max(1, committed),
-        steal_hints=sum(c.hints_sent for c in clients),
-        events=m.events, events_per_sec=m.events_per_sec,
-        wall_s=m.wall_s, heap_peak=m.heap_peak,
-        per_group=[ShardGroupStats(
-            group=g.group, ops_admitted=g.ops_admitted,
-            redirects=g.redirects, fenced_ops=g.fenced_ops,
-            migrations_in=g.migrations_in, migrations_out=g.migrations_out,
-            steals_started=g.steals_started, steal_nacks=g.steal_nacks)
-            for g in gates])
+        steal_hints=sum(r.hints_sent for r in client_rows),
+        per_group=sorted(gate_rows, key=lambda g: g.group),
+        events=events,
+        events_per_sec=events / wall_s if wall_s > 0 else 0.0,
+        wall_s=wall_s, heap_peak=heap_peak, workers=workers,
+        barriers=barriers, idle_wait_frac=idle_wait_frac,
+        per_engine=per_engine or [])

@@ -1,0 +1,143 @@
+"""Serial <-> parallel sharded-simulation equivalence (PR 3 tentpole).
+
+The contract: ``run_sharded`` with ``workers>=2`` (per-group event
+engines over worker processes, conservative time-window sync) produces
+**bit-identical** ``ShardedRunResult`` metrics to ``workers=1`` (the
+single-heap serial oracle) — every field except the wall-clock telemetry
+in ``TELEMETRY_FIELDS``. This holds because simulated timing is a pure
+function of per-link message history (per-link jitter sequences, FIFO
+floors, per-node busy-until), not of how engines' events interleave in
+one heap; see repro/shard/parallel.py for the full argument.
+
+Runs here are sized small: the point is schedule equivalence across
+locality modes and active object stealing, not load.
+"""
+
+import pytest
+
+from repro.shard import (ShardedRunConfig, lookahead_of,
+                         non_telemetry_metrics as _metrics, run_sharded)
+from repro.core.simulator import CostModel
+
+
+def _pair(**kw):
+    serial = run_sharded(ShardedRunConfig(**kw, workers=1))
+    parallel = run_sharded(ShardedRunConfig(**kw, workers=2))
+    return serial, parallel
+
+
+@pytest.mark.parametrize("n_groups", [2, 4])
+@pytest.mark.parametrize("locality", ["uniform", "mixed", "drift"])
+def test_parallel_matches_serial_bit_identical(n_groups, locality):
+    serial, parallel = _pair(
+        n_groups=n_groups, n_replicas_per_group=3, total_ops=1200,
+        batch_size=10, locality=locality, seed=3)
+    assert _metrics(serial.result) == _metrics(parallel.result)
+    assert parallel.result.workers == 2
+    assert parallel.result.barriers > 0
+
+
+def test_parallel_matches_serial_reference_group_size():
+    """The G=4 reference geometry (5 replicas per group, stealing
+    enabled, drift locality — the hardest of the three modes): acceptance
+    configuration of the PR 3 tentpole."""
+    serial, parallel = _pair(
+        n_groups=4, n_replicas_per_group=5, n_clients_per_group=2,
+        total_ops=2000, batch_size=10, locality="drift",
+        steal_threshold=3, seed=3)
+    assert _metrics(serial.result) == _metrics(parallel.result)
+
+
+def test_parallel_matches_serial_with_active_stealing():
+    """Stealing-heavy drift workload: fences, drains, grants, installs and
+    fenced-op replays all cross engine boundaries mid-run."""
+    serial, parallel = _pair(
+        n_groups=2, n_replicas_per_group=3, total_ops=2500, batch_size=10,
+        locality="drift", working_set=8, p_working=0.9, steal_threshold=2,
+        seed=5)
+    assert serial.result.migrations >= 1, "workload must exercise stealing"
+    assert _metrics(serial.result) == _metrics(parallel.result)
+
+
+def test_parallel_matches_serial_sparse_traffic():
+    """Sparse regression (code-review finding): with one client per group
+    and small batches the event heaps go idle between batches, so window
+    bounds computed from heap tops alone would let an early-arriving
+    boundary message's consequences cross back within the same window —
+    a causality violation that diverged `messages` before the bound also
+    counted in-flight arrivals. EventEngine.inject now hard-fails on any
+    delivery into an engine's past."""
+    serial, parallel = _pair(
+        n_groups=2, n_replicas_per_group=3, n_clients_per_group=1,
+        total_ops=400, batch_size=5, locality="uniform",
+        steal_threshold=0, seed=3)
+    assert _metrics(serial.result) == _metrics(parallel.result)
+
+
+def test_workers_exceeding_groups_degenerate():
+    """workers > G clamps to one engine per group and stays bit-identical
+    (worker count may never affect simulated behaviour)."""
+    cfg = dict(n_groups=2, n_replicas_per_group=3, total_ops=1200,
+               batch_size=10, locality="mixed", seed=3)
+    serial = run_sharded(ShardedRunConfig(**cfg, workers=1))
+    parallel = run_sharded(ShardedRunConfig(**cfg, workers=6))
+    assert parallel.result.workers == 2          # clamped to n_groups
+    assert _metrics(serial.result) == _metrics(parallel.result)
+
+
+def test_workers_auto_and_g1_fall_back_to_serial():
+    """G=1 has nothing to parallelize: any workers value runs the serial
+    engine (artifacts keep live sim/replica state)."""
+    art = run_sharded(ShardedRunConfig(
+        n_groups=1, n_replicas_per_group=3, total_ops=600, batch_size=10,
+        seed=2, workers=4))
+    assert art.result.workers == 1
+    assert art.sim is not None and art.clients
+
+
+def test_parallel_run_is_reproducible():
+    """Same seed, same workers => identical result across parallel runs
+    (barrier routing and injection order are deterministic)."""
+    cfg = dict(n_groups=4, n_replicas_per_group=3, total_ops=1200,
+               batch_size=10, locality="drift", seed=7)
+    a = run_sharded(ShardedRunConfig(**cfg, workers=2))
+    b = run_sharded(ShardedRunConfig(**cfg, workers=2))
+    assert _metrics(a.result) == _metrics(b.result)
+
+
+def test_lookahead_is_min_cross_group_delay():
+    c = CostModel()
+    la = lookahead_of(c)
+    assert la == min(c.net_base + c.net_cross,
+                     c.net_client + c.net_remote_client)
+    assert la > 0
+    # stealing disabled: replica<->replica never crosses groups, so the
+    # window widens to the client WAN hop
+    assert lookahead_of(c, allow_steal=False) \
+        == c.net_client + c.net_remote_client
+    # adversarial cost models shrink but never zero the window
+    tight = CostModel(net_client=1e-6, net_base=2e-3)
+    assert lookahead_of(tight) > 0
+
+
+def test_parallel_matches_serial_stealing_disabled_wide_window():
+    """steal_threshold=0 runs with the wider client-WAN lookahead; the
+    contract must hold there too (fewer, larger windows)."""
+    serial, parallel = _pair(
+        n_groups=2, n_replicas_per_group=3, total_ops=1200, batch_size=10,
+        locality="mixed", steal_threshold=0, seed=3)
+    assert _metrics(serial.result) == _metrics(parallel.result)
+
+
+def test_parallel_telemetry_populated():
+    art = run_sharded(ShardedRunConfig(
+        n_groups=2, n_replicas_per_group=3, total_ops=1200, batch_size=10,
+        locality="uniform", seed=3, workers=2))
+    r = art.result
+    assert r.barriers > 0
+    assert 0.0 <= r.idle_wait_frac <= 1.0
+    assert len(r.per_engine) == 2
+    for es in r.per_engine:
+        assert es.events > 0
+        assert es.wall_s >= 0.0
+        assert es.messages > 0
