@@ -22,9 +22,10 @@ import time
 
 from benchmarks import (bench_batch_size, bench_client_scaling,
                         bench_conflict_rate, bench_engine,
-                        bench_grad_quorum, bench_parallel_shard,
-                        bench_quorum_kernel, bench_server_scaling,
-                        bench_shard_scaling, bench_weights)
+                        bench_fault_recovery, bench_grad_quorum,
+                        bench_parallel_shard, bench_quorum_kernel,
+                        bench_server_scaling, bench_shard_scaling,
+                        bench_weights)
 
 SUITES = [
     ("engine", bench_engine),
@@ -37,6 +38,7 @@ SUITES = [
     ("server_scaling", bench_server_scaling),
     ("shard_scaling", bench_shard_scaling),
     ("parallel", bench_parallel_shard),
+    ("faults", bench_fault_recovery),
 ]
 
 

@@ -155,6 +155,13 @@ class EPaxosReplica(BaseReplica):
 
     def on_epx_commit(self, msg: Msg, now: float) -> None:
         ops: List[Op] = msg.payload["ops"]
+        if self.recovering:
+            # mid-state-transfer: applying now would be overwritten by the
+            # incoming snapshot (and the ops lost) — route through the
+            # recovery buffer like the other protocols' commit paths
+            for op in ops:
+                self._recovery_buf.append((op, None, op.path or "fast"))
+            return
         c = self.sim.costs
         self.sim.busy(self.node_id,
                       c.c_apply * len(ops) * c.speed(self.node_id))

@@ -55,8 +55,8 @@ class FastBatch:
     acc: np.ndarray          # (B,) accumulated weight
     resolved: np.ndarray     # (B,) bool: committed or diverted
     propose_time: float
-    leader: int              # leader id at propose time (must co-sign)
-    leader_voted: bool
+    leader_voted: bool       # the current leader's co-sign arrived (its
+                             # accept carries an explicit "lead" flag)
     n_resolved: int = 0      # fast "nothing resolved yet" check
     timer: object = None     # fast_timeout handle (cancelled on resolve)
     observe: List[Op] = dataclasses.field(default_factory=list)
@@ -93,7 +93,7 @@ class FastPathMixin:
             ops=ops, weights=wmat, threshold=table.half_sum,
             acc=wmat[:, self.node_id].copy(),        # self-vote (line 4)
             resolved=np.zeros(B, dtype=bool), propose_time=now,
-            leader=leader, leader_voted=(leader == self.node_id))
+            leader_voted=(leader == self.node_id))
         if fb.leader_voted:
             last_applied = self.last_applied
             for op in ops:
@@ -141,7 +141,12 @@ class FastPathMixin:
             accept = live & mask
             fb.acc[accept] += fb.weights[accept, src]
             conflicted = live & ~mask
-        if src == fb.leader:
+        # the co-sign is the replier's own leadership claim (explicit
+        # "lead" flag), not the coordinator's possibly-stale view of who
+        # leads: behind a partition the coordinator's believed leader is
+        # just another cut-off replica whose ordinary vote must not
+        # unlock commits (see current_leader's majority lease)
+        if msg.payload.get("lead"):
             fb.leader_voted = True
             for i, dep in msg.payload.get("deps", {}).items():
                 fb.deps[fb.ops[i].op_id] = [dep]
@@ -221,6 +226,9 @@ class FastPathMixin:
         lazy expiry of stale entries) is inlined — it runs B x (n-1)
         times per client batch."""
         ops: List[Op] = msg.payload["ops"]
+        if self._isolated:
+            return        # no votes from behind a partition (the round
+                          # times out at the coordinator and diverts)
         bits = 0
         deps: Dict[int, int] = {}
         am_leader = self.is_leader(now)
@@ -258,12 +266,18 @@ class FastPathMixin:
                     in_flight[obj] = {op_id: now}
                 else:
                     d[op_id] = now
+                # accepted-op record: a fast round can cross T^O with this
+                # vote and lose its coordinator (and commit broadcast) in
+                # the same breath — the accepters are then the only place
+                # the decided op survives (protocol_base._accept_sweep)
+                self._note_accepted(op, msg.src, now)
                 if am_leader:
                     dep = last_applied.get(obj)
                     if dep is not None:
                         deps[i] = dep
         payload = {"fb": msg.payload["fb"], "mask": bits}
         if am_leader:
+            payload["lead"] = True
             payload["deps"] = deps
         self.send(msg.src, "fast_accept", payload)
 

@@ -150,6 +150,22 @@ class BaseReplica(Node):
         self.recovering = False
         self._recovery_buf: list = []
         self._lead_after = 0.0       # no self-candidacy before this time
+        # partition-heal re-sync: set while a majority of peers is
+        # heartbeat-stale (we may be cut off and missing commits — there
+        # is no retransmission of old commits, so our log grows holes);
+        # cleared when the heal-triggered state transfer completes.
+        self._isolated = False
+        self._hb_timer = None
+        # accepted-op recovery (the Paxos phase-1 obligation, sweep-style):
+        # op_id -> (op, last_seen, driver) for ops this replica accepted
+        # (slow proposals, fast co-signs) whose commit it has not applied.
+        # If the driving node goes heartbeat-stale, the op may have been
+        # DECIDED right before the driver vanished (its commit broadcast
+        # lost with it) — re-propose through the slow path, which is safe
+        # either way because application is op_id-idempotent. In healthy
+        # runs drivers stay fresh and the sweep never sends a message.
+        self._accepted_ops: Dict[int, tuple] = {}
+        self._sweep_armed = False
 
     # -- weights -------------------------------------------------------------
 
@@ -221,18 +237,36 @@ class BaseReplica(Node):
     def current_leader(self, now: float) -> int:
         if now <= self._leader_until:
             return self._leader_memo
-        candidate = not self.recovering and now >= self._lead_after
+        candidate = (not self.recovering and now >= self._lead_after
+                     and not self._isolated)
         me = self.node_id
+        n = self.sim.n
         last_hb = self.last_hb
         hb_to = self.HB_TIMEOUT
-        for r in range(self.sim.n):
+        for r in range(n):
             if r == me:
-                if candidate:
-                    # smaller ids are all dead; only a heartbeat from one
-                    # of them changes this (invalidated in on_heartbeat)
-                    self._leader_memo = r
-                    self._leader_until = float("inf")
-                    return r
+                if not candidate:
+                    continue
+                # smaller ids are all dead. Claim leadership only while a
+                # count-majority of the deployment is heartbeat-fresh: a
+                # cut-off replica ranks ITSELF top-weight in its private
+                # EMA view, so without this lease two partition sides can
+                # both cross their (differently-weighted) slow thresholds
+                # — the split-brain the fault suite reproduces. Weighted
+                # quorum speed is untouched: commits still wait only for
+                # weight > T^N, the lease just pins who may drive them.
+                fresh = [last_hb[p] for p in range(n)
+                         if p != me and now - last_hb[p] <= hb_to]
+                need = n // 2          # peers needed besides self
+                if len(fresh) >= need:
+                    if need:
+                        fresh.sort(reverse=True)
+                        until = fresh[need - 1] + hb_to  # lease lapse
+                    else:
+                        until = float("inf")
+                    self._leader_memo = me
+                    self._leader_until = until
+                    return me
                 continue
             if now - last_hb[r] <= hb_to:
                 # valid until this leader's detector window lapses, or we
@@ -244,7 +278,7 @@ class BaseReplica(Node):
                 self._leader_memo = r
                 self._leader_until = until
                 return r
-        return me if candidate else (me + 1) % self.sim.n
+        return (me + 1) % n
 
     def _leader_invalidate(self) -> None:
         self._leader_until = -1.0
@@ -255,7 +289,84 @@ class BaseReplica(Node):
     def start_heartbeats(self) -> None:
         if not self._hb_armed:
             self._hb_armed = True
-            self.set_timer(self.HB_INTERVAL, "hb")
+            self._hb_timer = self.set_timer(self.HB_INTERVAL, "hb")
+
+    # -- partition-heal detection ----------------------------------------------
+    #
+    # A crash gets an explicit engine recovery hook, but a partitioned
+    # replica never "recovers" — the network just comes back. While it was
+    # cut off it missed commit broadcasts for good (nothing retransmits old
+    # commits), so its log has holes and serving reads/sync from it would
+    # leak them. Detection: if a majority of the deployment is
+    # heartbeat-stale, we are on the losing side of a partition (or the
+    # cluster is mostly down — indistinguishable, and the response is the
+    # same); once connectivity returns, rejoin through the crash-recovery
+    # state transfer. Fault-free and crash-only runs never trip this: the
+    # scan costs no simulated time and a single crashed peer is far below
+    # the majority threshold.
+
+    def _check_isolation(self, now: float) -> None:
+        if self.recovering:
+            return                    # sync already in flight
+        n = self.sim.n
+        if n < 3 or now < self.HB_TIMEOUT * 2:
+            return                    # bootstrap: no heartbeats yet
+        cutoff = now - self.HB_TIMEOUT
+        last_hb = self.last_hb
+        me = self.node_id
+        stale = 0
+        for r in range(n):
+            if r != me and last_hb[r] < cutoff:
+                stale += 1
+        if (n - stale) * 2 <= n:      # self + fresh peers is no majority
+            self._isolated = True
+        elif self._isolated:
+            # connectivity is back after an isolation episode: pull a
+            # snapshot exactly like a crash-recovery rejoin (the flag
+            # stays set until on_sync_state installs it, so safety
+            # checkers keep excluding our possibly-holed log)
+            self.on_recover(now)
+
+    # -- accepted-op recovery sweep -------------------------------------------
+
+    def _note_accepted(self, op, driver: int, now: float) -> None:
+        """Remember an op this replica accepted on behalf of ``driver``
+        (the proposing leader or fast-path coordinator) until it is seen
+        applied. The record is what makes a decided-but-unbroadcast
+        commit recoverable when the driver is lost."""
+        self._accepted_ops[op.op_id] = (op, now, driver)
+        if not self._sweep_armed:
+            self._sweep_armed = True
+            self.set_timer(self.sim.costs.timeout, "accept_sweep")
+
+    def _accept_sweep(self, now: float) -> None:
+        acc = self._accepted_ops
+        stale_cut = now - self.HB_TIMEOUT
+        min_age = self.gc_timeout / 2
+        applied_ops = self.rsm.applied_ops
+        last_hb = self.last_hb
+        me = self.node_id
+        done = []
+        resend = []
+        for op_id, (op, t_seen, driver) in acc.items():
+            if op_id in applied_ops:
+                done.append(op_id)
+            elif (now - t_seen >= min_age and driver != me
+                    and last_hb[driver] < stale_cut):
+                # accepted long ago, commit never arrived, and the driver
+                # is suspected dead: the decision (if there was one) died
+                # with its broadcast — re-drive through the slow path
+                resend.append(op)
+                acc[op_id] = (op, now, driver)     # backoff before retry
+        for op_id in done:
+            del acc[op_id]
+        if resend and not self.recovering and not self._isolated:
+            # (an isolated node would only re-drive into its own island)
+            self.forward_slow(resend, now)
+        if acc:
+            self.set_timer(self.sim.costs.timeout, "accept_sweep")
+        else:
+            self._sweep_armed = False
 
     def on_protocol_timer(self, name: str, payload: dict, now: float) -> None:
         pass
@@ -280,6 +391,11 @@ class BaseReplica(Node):
         self.in_flight.clear()
         self._obj_buffer.clear()
         self._credit_buf.clear()
+        # accepted-op records die with the crash (volatile): recovery of a
+        # lost decision needs only one LIVE accepter, and a wiped node
+        # must not re-drive ops from a stale view of who proposed what
+        self._accepted_ops.clear()
+        self._sweep_armed = False
         if hasattr(self, "slow_queue"):
             self.slow_queue.clear()
             self.slow_mutex = False
@@ -302,6 +418,13 @@ class BaseReplica(Node):
         self.set_timer(0.05, "sync_retry", {"attempt": attempt + 1})
 
     def on_sync_req(self, msg: Msg, now: float) -> None:
+        if self.recovering or self._isolated:
+            # our own log may be stale or holed (mid-sync, or cut off by
+            # a partition): serving a snapshot would propagate the holes.
+            # Stay silent — the requester's sync_retry walks to the next
+            # peer. (Regression: rolling crashes used to let a
+            # still-recovering node serve its pre-crash state.)
+            return
         # any live replica can serve catch-up; cost scales with state size
         c = self.sim.costs
         self.sim.busy(self.node_id, c.c_parse * len(self.rsm.applied_ops)
@@ -336,6 +459,7 @@ class BaseReplica(Node):
                 self.set_timer(self.gc_timeout, "dep_timeout",
                                {"obj": obj, "op_id": op.op_id})
         self.recovering = False
+        self._isolated = False
         buf, self._recovery_buf = self._recovery_buf, []
         for op, deps, path in buf:
             self.apply_commit(op, now, path, deps)
@@ -350,6 +474,12 @@ class BaseReplica(Node):
         self.set_timer(self.HB_TIMEOUT * 1.2, "rejoin")
 
     def on_rejoin(self, now: float) -> None:
+        # restart a single heartbeat chain: after a crash the old timer
+        # was swallowed while down, but after a partition-heal rejoin the
+        # node was alive throughout and its chain is still armed — cancel
+        # it so heal cycles don't stack chains (and double the hb rate)
+        if self._hb_timer is not None:
+            self._hb_timer.cancel()
         self._hb_armed = False
         self.start_heartbeats()
 
@@ -521,6 +651,9 @@ class BaseReplica(Node):
         if name == "rejoin":
             self.on_rejoin(now)
             return
+        if name == "accept_sweep":
+            self._accept_sweep(now)
+            return
         if name == "dep_timeout":
             # force-apply in FIFO order: the missing dependency never
             # committed (it will be retried as a fresh op if still wanted)
@@ -542,7 +675,8 @@ class BaseReplica(Node):
             for d in self.sim.replicas():
                 if d != self.node_id:
                     self.send(d, "heartbeat", {})
-            self.set_timer(self.HB_INTERVAL, "hb")
+            self._hb_timer = self.set_timer(self.HB_INTERVAL, "hb")
+            self._check_isolation(now)
             return
         self.on_protocol_timer(name, payload, now)
 

@@ -4,7 +4,7 @@ metrics. This is the harness behind every §5 benchmark."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Type
+from typing import Dict, List, Optional, Sequence, Type
 
 from repro.core.cabinet import CabinetReplica, PaxosReplica
 from repro.core.epaxos import EPaxosReplica
@@ -12,6 +12,7 @@ from repro.core.protocol_base import BaseReplica
 from repro.core.simulator import (Client, CostModel, RunResult, Simulation,
                                   Workload, collect_metrics)
 from repro.core.woc import WocReplica
+from repro.faults import compile_schedule
 
 PROTOCOLS: Dict[str, Type[BaseReplica]] = {
     "woc": WocReplica,
@@ -50,6 +51,11 @@ class RunConfig:
     crash_at: Optional[float] = None    # crash the initial leader at t
     recover_at: Optional[float] = None
     sim_time_cap: float = 300.0
+    # declarative fault schedule (repro.faults events), compiled onto the
+    # engine before the run; implies history capture so the run can be
+    # verified (repro.verify)
+    faults: Sequence = ()
+    capture_history: bool = False
 
 
 @dataclasses.dataclass
@@ -88,6 +94,8 @@ def run(cfg: RunConfig) -> RunArtifacts:
         sim.crash(0, cfg.crash_at)
     if cfg.recover_at is not None:
         sim.recover(0, cfg.recover_at)
+    if cfg.faults:
+        compile_schedule(sim, cfg.faults, n_replicas=cfg.n_replicas)
 
     for c in clients:
         c.start()
@@ -97,4 +105,7 @@ def run(cfg: RunConfig) -> RunArtifacts:
 
     result = collect_metrics(cfg.protocol, sim, clients, cfg.batch_size,
                              t_start=0.0)
+    if cfg.capture_history or cfg.faults:
+        from repro.verify import capture_history
+        result.history = capture_history(clients)
     return RunArtifacts(result, sim, replicas, clients)

@@ -74,6 +74,17 @@ Engine notes (PR 3 parallel-simulation refactor):
     a partitioned run it is what makes commit metadata collectable even
     though a cross-engine ``Op`` reference is a pickled copy.
 
+Engine notes (PR 4 fault injection):
+
+  * **Link faults.** :meth:`EventEngine.cut_links` /
+    :meth:`EventEngine.restore_links` / :meth:`EventEngine.set_degrade`
+    schedule ``_FAULT`` heap events next to crash/recover, so a fault
+    schedule is part of the deterministic event stream. Cuts drop
+    messages at post time (in-flight messages survive, like packets
+    already in the pipe); degrade multiplies one-way delays. The
+    declarative layer lives in :mod:`repro.faults`; verification of the
+    resulting histories in :mod:`repro.verify`.
+
 Entity ids: replicas are ``0..n-1``; clients are ``n..n+m-1``.
 """
 
@@ -250,7 +261,7 @@ class Node:
 
 # heap event kinds (ints compare faster than strings and never reach the
 # tuple comparison anyway — (time, seq) is always unique)
-_ARRIVE, _PROC, _TIMER, _CRASH, _RECOVER = 0, 1, 2, 3, 4
+_ARRIVE, _PROC, _TIMER, _CRASH, _RECOVER, _FAULT = 0, 1, 2, 3, 4, 5
 
 
 class EventEngine:
@@ -308,6 +319,12 @@ class EventEngine:
         # pairs, not message count, so no pruning is needed.
         self._links: Dict[int, list] = {}
         self.crashed: set[int] = set()
+        # link faults (repro.faults): directed links currently down (keyed
+        # src<<24|dst like _links) and per-node network-delay inflation
+        # factors. Both empty in fault-free runs — post() pays one
+        # truthiness check each.
+        self._cut: set[int] = set()
+        self._degrade: Dict[int, float] = {}
         self.clients_done = 0          # bumped by Client on completion
         # op_id -> (commit_time, path): earliest protocol stamp, written
         # next to every ``op.commit_time = now`` site (metrics substrate
@@ -469,6 +486,10 @@ class EventEngine:
         dst = msg.dst
         if self.crashed and (src in self.crashed or dst in self.crashed):
             return
+        if self._cut and ((src << 24) | dst) in self._cut:
+            return      # link down: lost in the network (same free-drop
+                        # convention as posts to/from crashed nodes; app-
+                        # level retries and retransmit timers re-drive)
         b = self._busy
         t = b[src]
         now = self.now
@@ -491,7 +512,16 @@ class EventEngine:
             & _U64
         x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _U64
         x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _U64
-        arrive = send_done + self._delay_base[src][dst] \
+        base = self._delay_base[src][dst]
+        deg = self._degrade
+        if deg:
+            f = deg.get(src)
+            if f is not None:
+                base *= f
+            f = deg.get(dst)
+            if f is not None:
+                base *= f
+        arrive = send_done + base \
             + ((x ^ (x >> 31)) & _U64) * self._jit_scale
         # per-link FIFO delivery (TCP semantics): messages on one connection
         # never reorder, which real protocol implementations rely on.
@@ -529,6 +559,53 @@ class EventEngine:
         seq = self._seq
         self._seq = seq + 1
         heapq.heappush(self._heap, (at, seq, _RECOVER, node_id))
+
+    # -- link faults (repro.faults: nemesis fault injection) ------------------
+    #
+    # Faults are heap events like crash/recover, so a fault schedule is part
+    # of the deterministic event stream: same seed + schedule => identical
+    # timing. Link cuts drop messages at POST time (a message already in
+    # flight when the cut lands is delivered — packets in the pipe survive a
+    # partition); degrade inflates one-way delays of every message posted
+    # while the factor is active.
+
+    def _schedule_fault(self, at: float, action: str, payload) -> None:
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (at, seq, _FAULT, (action, payload)))
+
+    def cut_links(self, pairs, at: float) -> None:
+        """From time ``at``, drop every message posted on the directed
+        (src, dst) links in ``pairs`` until :meth:`restore_links`."""
+        self._schedule_fault(at, "cut",
+                             frozenset((s << 24) | d for s, d in pairs))
+
+    def restore_links(self, pairs=None, at: float = 0.0) -> None:
+        """Heal the given directed links at ``at`` (all links if None)."""
+        keys = None if pairs is None else \
+            frozenset((s << 24) | d for s, d in pairs)
+        self._schedule_fault(at, "restore", keys)
+
+    def set_degrade(self, node: int, factor: float, at: float) -> None:
+        """From ``at``, multiply one-way network delays of messages sent
+        to or from ``node`` by ``factor`` (1.0 heals). Both endpoints
+        degraded compounds — matching a shared congested uplink."""
+        self._schedule_fault(at, "degrade", (node, factor))
+
+    def _apply_fault(self, action: str, payload) -> None:
+        if action == "cut":
+            self._cut.update(payload)
+        elif action == "restore":
+            if payload is None:
+                self._cut.clear()
+            else:
+                self._cut.difference_update(payload)
+        else:  # "degrade"
+            node, factor = payload
+            if factor is not None and factor != 1.0:
+                self._degrade[node] = factor
+            else:
+                self._degrade.pop(node, None)
 
     # -- run ------------------------------------------------------------------
 
@@ -615,12 +692,14 @@ class EventEngine:
                         nodes[node_id].on_timer(name, payload, t)
                 elif kind == _CRASH:
                     crashed.add(item)
-                else:  # _RECOVER
+                elif kind == _RECOVER:
                     crashed.discard(item)
                     busy[item] = t
                     hook = getattr(self.nodes.get(item), "on_recover", None)
                     if hook is not None:
                         hook(t)
+                else:  # _FAULT
+                    self._apply_fault(*item)
         finally:
             if gc_was_on:
                 gc.enable()
@@ -854,6 +933,10 @@ class RunResult:
     events_per_sec: float = 0.0
     wall_s: float = 0.0
     heap_peak: int = 0
+    # client invoke/response history (repro.verify.HistoryEntry records),
+    # captured when RunConfig.capture_history is set or a fault schedule is
+    # active; deterministic given seed + schedule, unlike the telemetry
+    history: list = dataclasses.field(default_factory=list, repr=False)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_replicas},{self.n_clients},"

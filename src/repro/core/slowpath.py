@@ -136,6 +136,11 @@ class SlowPathMixin:
                        {"op_ids": [op.op_id for op in ops], "backoff": 1})
 
     def on_slow_forward(self, msg: Msg, now: float) -> None:
+        if self._isolated:
+            # cut off from the majority: we can neither commit this nor
+            # know the real leader — drop; the sender's retransmit
+            # backoff (or the client's retry) re-drives it elsewhere
+            return
         if not self.is_leader(now):                # stale leader view: bounce
             self.send(self.current_leader(now), "slow_forward", msg.payload,
                       size_ops=len(msg.payload["ops"]))
@@ -248,12 +253,18 @@ class SlowPathMixin:
     # -- follower side -----------------------------------------------------------
 
     def on_slow_propose(self, msg: Msg, now: float) -> None:
+        if self._isolated:
+            return        # no votes from behind a partition (split-brain
+                          # guard; the proposer's instance times out)
         if msg.src != self.current_leader(now):
             self.send(msg.src, "slow_nack", {"inst": msg.payload["inst"]})
             return
         for op in msg.payload["ops"]:
             # cross-path guard (Thm 2): fast attempts now see a conflict
             self.register_inflight(op.obj, op.op_id, now)
+            # accepted-op record: if the leader is lost right after this
+            # instance crosses its threshold, the decision survives here
+            self._note_accepted(op, msg.src, now)
         self.send(msg.src, "slow_accept", {"inst": msg.payload["inst"]})
 
     def on_slow_commit(self, msg: Msg, now: float) -> None:

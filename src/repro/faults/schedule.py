@@ -1,0 +1,197 @@
+"""Declarative fault schedules (the nemesis vocabulary).
+
+A fault schedule is a sequence of timed, declarative events — crash a
+replica, partition a set of replicas away from the rest, inflate a
+replica's network delays — that :func:`compile_schedule` lowers onto the
+deterministic event engine (``EventEngine.crash/recover/cut_links/
+restore_links/set_degrade``). Because the lowered faults are ordinary
+heap events, a schedule is part of the simulation's deterministic event
+stream: same seed + same schedule gives bit-identical runs.
+
+Node references are either explicit global replica ids or symbolic
+selectors resolved against the static deployment ranking (the
+simulator's ``speed()`` is non-decreasing in id, so id 0 is the fastest
+— and top-weighted — replica, and the initial leader of the
+leader-based protocols):
+
+  * ``"leader"`` / ``"top_weight"`` — replica 0
+  * ``"low_weight"``                — replica n-1 (slowest)
+  * ``"median"``                    — replica n//2
+
+In sharded runs symbolic selectors resolve inside group 0's id block
+(group g's replicas occupy ``[g*group_size, (g+1)*group_size)``); use
+explicit ids to target other groups.
+
+Partition semantics: links are cut between the ``side`` set and every
+*other replica* — clients stay connected to everyone (paper-style
+clients fail over by retrying elsewhere; a partition models a backbone
+cut, not client loss). ``symmetric=False`` cuts only the inbound
+direction: the side can still send (its heartbeats keep arriving, so
+peers do not suspect it) but receives nothing from the rest — the
+adversarial "deaf coordinator" regime for heartbeat-rank election.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple, Union
+
+NodeRef = Union[int, str]
+
+_SYMBOLIC = ("leader", "top_weight", "low_weight", "median")
+
+
+def resolve_node(ref: NodeRef, n_replicas: int) -> int:
+    """Resolve a node reference to a replica id in ``[0, n_replicas)``
+    (sharded runs resolve symbolic refs against the group size — see
+    ``compile_schedule``'s ``symbolic_n``)."""
+    if isinstance(ref, str):
+        if ref in ("leader", "top_weight"):
+            return 0
+        if ref == "low_weight":
+            return n_replicas - 1
+        if ref == "median":
+            return n_replicas // 2
+        raise ValueError(f"unknown node selector {ref!r} "
+                         f"(expected one of {_SYMBOLIC} or an int)")
+    node = int(ref)
+    if not 0 <= node < n_replicas:
+        raise ValueError(f"node id {node} out of range [0, {n_replicas})")
+    return node
+
+
+@dataclasses.dataclass(frozen=True)
+class Crash:
+    """Fail-stop ``node`` at time ``at`` (messages to/from it vanish,
+    its timers stop). Pair with :class:`Recover` for crash-recovery."""
+    at: float
+    node: NodeRef = "leader"
+
+
+@dataclasses.dataclass(frozen=True)
+class Recover:
+    """Restart ``node`` at ``at``: volatile state is wiped and the
+    replica pulls a state-transfer snapshot before rejoining
+    (``BaseReplica.on_recover``)."""
+    at: float
+    node: NodeRef = "leader"
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Cut replica links between ``side`` and the remaining replicas at
+    ``at``. ``symmetric=False`` cuts only links INTO the side (deaf but
+    still heard). Heal with :class:`Heal`."""
+    at: float
+    side: Tuple[NodeRef, ...] = ("leader",)
+    symmetric: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Heal:
+    """Restore every cut link at ``at`` (partitions only; crashed nodes
+    need :class:`Recover`, degraded nodes a ``factor=1`` Degrade)."""
+    at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Degrade:
+    """Multiply one-way network delays to/from ``node`` by ``factor``
+    from ``at`` on (``factor=1.0`` heals). Degrading the top-weight
+    replica is the regime where dynamic re-ranking must shift quorum
+    weight away from it."""
+    at: float
+    node: NodeRef = "top_weight"
+    factor: float = 8.0
+
+
+FaultEvent = Union[Crash, Recover, Partition, Heal, Degrade]
+
+
+def compile_schedule(engine, events: Sequence[FaultEvent],
+                     n_replicas: int | None = None,
+                     symbolic_n: int | None = None) -> None:
+    """Lower a declarative schedule onto an event engine. ``n_replicas``
+    bounds the replica id space (defaults to ``engine.n``);
+    ``symbolic_n`` is the id block symbolic selectors resolve inside
+    (sharded runs pass the group size so ``"leader"`` means group 0's
+    leader; defaults to ``n_replicas``)."""
+    n = n_replicas if n_replicas is not None else engine.n
+    sn = symbolic_n if symbolic_n is not None else n
+
+    def res(ref: NodeRef) -> int:
+        return resolve_node(ref, sn if isinstance(ref, str) else n)
+
+    for ev in events:
+        if isinstance(ev, Crash):
+            engine.crash(res(ev.node), ev.at)
+        elif isinstance(ev, Recover):
+            engine.recover(res(ev.node), ev.at)
+        elif isinstance(ev, Partition):
+            side = {res(r) for r in ev.side}
+            if not side or len(side) >= n:
+                raise ValueError(f"partition side {ev.side!r} must be a "
+                                 f"proper non-empty subset of {n} replicas")
+            rest = [r for r in range(n) if r not in side]
+            pairs = [(o, s) for o in rest for s in side]
+            if ev.symmetric:
+                pairs += [(s, o) for s in side for o in rest]
+            engine.cut_links(pairs, ev.at)
+        elif isinstance(ev, Heal):
+            engine.restore_links(None, ev.at)
+        elif isinstance(ev, Degrade):
+            engine.set_degrade(res(ev.node), ev.factor, ev.at)
+        else:
+            raise TypeError(f"not a fault event: {ev!r}")
+
+
+# ---------------------------------------------------------------------------
+# Preset schedules (the scenarios the paper's heterogeneity story cares about)
+# ---------------------------------------------------------------------------
+
+def leader_crash(at: float = 0.1,
+                 recover_at: float | None = None) -> Tuple[FaultEvent, ...]:
+    """Crash the initial leader / top-weight replica (optionally recover)."""
+    events: Tuple[FaultEvent, ...] = (Crash(at, "leader"),)
+    if recover_at is not None:
+        events += (Recover(recover_at, "leader"),)
+    return events
+
+
+def rolling_crashes(start: float = 0.1, gap: float = 0.2,
+                    down: float = 0.15,
+                    nodes: Sequence[NodeRef] = (1, 2)) -> Tuple[FaultEvent, ...]:
+    """Crash ``nodes`` one at a time, each recovering before the next
+    falls — the rolling-restart regime (never two down at once when
+    ``gap >= down``)."""
+    events: list[FaultEvent] = []
+    t = start
+    for node in nodes:
+        events.append(Crash(t, node))
+        events.append(Recover(t + down, node))
+        t += gap
+    return tuple(events)
+
+
+def asym_partition(at: float = 0.1, heal_at: float = 0.3,
+                   side: Tuple[NodeRef, ...] = ("leader",)
+                   ) -> Tuple[FaultEvent, ...]:
+    """Deaf-side partition: ``side`` keeps sending (peers still see its
+    heartbeats) but receives nothing from other replicas until heal."""
+    return (Partition(at, side, symmetric=False), Heal(heal_at))
+
+
+def sym_partition(at: float = 0.1, heal_at: float = 0.3,
+                  side: Tuple[NodeRef, ...] = ("leader",)
+                  ) -> Tuple[FaultEvent, ...]:
+    """Full bidirectional partition of ``side`` until heal."""
+    return (Partition(at, side, symmetric=True), Heal(heal_at))
+
+
+def degrade_top(at: float = 0.1, heal_at: float = 0.4,
+                factor: float = 8.0) -> Tuple[FaultEvent, ...]:
+    """Degrade the top-weight replica's network by ``factor``, then heal
+    — the weight-reassignment stress: quorum weight must migrate off the
+    degraded node and back."""
+    return (Degrade(at, "top_weight", factor),
+            Degrade(heal_at, "top_weight", 1.0))

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -65,6 +65,12 @@ class ShardedRunConfig:
     # 1 = serial single-heap oracle; >=2 = parallel per-group engines over
     # that many worker processes; 0 = auto (min(n_groups, cpu_count))
     workers: int = 1
+    # declarative fault schedule (repro.faults): serial-only for now —
+    # conservative window lookahead does not yet model partitions, so
+    # explicit workers>1 with faults fails fast and workers=0 resolves
+    # to serial. Symbolic node selectors resolve inside group 0's block.
+    faults: Sequence = ()
+    capture_history: bool = False
 
 
 @dataclasses.dataclass
@@ -123,6 +129,11 @@ class ShardedRunResult:
     idle_wait_frac: float = 0.0        # parallel: worker time blocked at
                                        # window barriers / total worker time
     per_engine: List[EngineStats] = dataclasses.field(default_factory=list)
+    # client invoke/response history (repro.verify), captured on serial
+    # runs when capture_history/faults is set; deterministic, so NOT a
+    # telemetry field (parallel runs never capture — see faults note on
+    # ShardedRunConfig — so the serial<->parallel contract is unaffected)
+    history: list = dataclasses.field(default_factory=list, repr=False)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_groups},{self.group_size},"
@@ -270,6 +281,15 @@ def build_client(sim, cfg: ShardedRunConfig, ci: int,
 
 def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
     w = resolve_workers(cfg)
+    if cfg.faults and w > 1:
+        if cfg.workers == 0:
+            w = 1          # auto resolves to the serial oracle
+        else:
+            raise ValueError(
+                "faults require serial execution (workers=1): the "
+                "conservative window lookahead does not yet model "
+                "partitions, so parallel sharded runs cannot replay a "
+                "fault schedule deterministically")
     if w > 1 and cfg.n_groups > 1:
         from repro.shard.parallel import run_sharded_parallel
         return run_sharded_parallel(cfg, w)
@@ -281,6 +301,10 @@ def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
 
     gates = [make_gate(cfg, g) for g in range(G)]
     replicas = [build_group(sim, cfg, g, gates[g]) for g in range(G)]
+    if cfg.faults:
+        from repro.faults import compile_schedule
+        compile_schedule(sim, cfg.faults, n_replicas=G * npg,
+                         symbolic_n=npg)
 
     swl = shard_workload_of(cfg)
     clients = [build_client(sim, cfg, ci, swl) for ci in range(n_clients)]
@@ -302,6 +326,9 @@ def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
         makespan_t=sim.now, messages=sim.stats_messages,
         events=sim.stats_events, wall_s=sim.wall_s,
         heap_peak=sim.heap_peak, workers=1)
+    if cfg.capture_history or cfg.faults:
+        from repro.verify import capture_history
+        result.history = capture_history(clients)
     return ShardedRunArtifacts(result, sim, replicas, gates, clients)
 
 

@@ -1,0 +1,291 @@
+"""Unit tests for the per-object linearizability checker (repro.verify).
+
+Covers: known-good and known-bad synthetic histories for both engines
+(the Wing & Gong search and the unique-writes reign decomposition), an
+engine cross-check on random histories, and the mutation checks — a
+deliberately injected commit-ordering bug must be caught by the
+verifier, and a local-stale-read bug invisible in fault-free runs must
+be caught once a nemesis partition widens the staleness window.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import runner as runner_mod
+from repro.core.runner import RunConfig, run
+from repro.core.simulator import Workload
+from repro.core.woc import WocReplica
+from repro.faults import sym_partition
+from repro.verify import (capture_history, check_history_linearizable,
+                          check_object_linearizable, verify_artifacts)
+from repro.verify.linearizability import (SEARCH_MAX_OPS, _check_unique_writes,
+                                          _quick_reject, _search)
+from repro.core.rsm import HistoryEntry
+
+
+def H(op_id, kind, value, invoke, response, obj=1):
+    return HistoryEntry(op_id, obj, kind, value, invoke, response)
+
+
+# ---------------------------------------------------------------------------
+# Known-good histories
+# ---------------------------------------------------------------------------
+
+def test_sequential_write_read():
+    hist = [H(1, "w", 10, 0.0, 1.0), H(2, "r", 10, 2.0, 3.0)]
+    ok, why = check_history_linearizable(hist)
+    assert ok, why
+
+
+def test_read_of_initial_state():
+    hist = [H(1, "r", None, 0.0, 1.0), H(2, "w", 10, 2.0, 3.0)]
+    ok, why = check_history_linearizable(hist)
+    assert ok, why
+
+
+def test_concurrent_writes_any_order():
+    # fully overlapping writes: any order is a valid linearization
+    hist = [H(1, "w", 10, 0.0, 5.0), H(2, "w", 20, 0.1, 5.0),
+            H(3, "w", 30, 0.2, 5.0)]
+    ok, why = check_history_linearizable(hist)
+    assert ok, why
+
+
+def test_concurrent_read_may_see_either_side():
+    # read overlaps a write: both old and new value are linearizable
+    for seen in (None, 10):
+        hist = [H(1, "w", 10, 1.0, 3.0), H(2, "r", seen, 0.5, 3.5)]
+        ok, why = check_history_linearizable(hist)
+        assert ok, (seen, why)
+
+
+def test_interleaved_reads_two_values():
+    hist = [H(1, "w", 10, 0.0, 1.0), H(2, "r", 10, 1.5, 2.0),
+            H(3, "w", 20, 2.5, 3.0), H(4, "r", 20, 3.5, 4.0)]
+    ok, why = check_history_linearizable(hist)
+    assert ok, why
+
+
+def test_multi_object_histories_decompose():
+    hist = [H(1, "w", 10, 0.0, 1.0, obj=1), H(2, "w", 20, 0.0, 1.0, obj=2),
+            H(3, "r", 10, 2.0, 3.0, obj=1), H(4, "r", 20, 2.0, 3.0, obj=2)]
+    ok, why = check_history_linearizable(hist)
+    assert ok, why
+
+
+# ---------------------------------------------------------------------------
+# Known-bad histories
+# ---------------------------------------------------------------------------
+
+def test_stale_read_rejected():
+    # write 20 wholly completes before the read starts, read returns 10
+    hist = [H(1, "w", 10, 0.0, 1.0), H(2, "w", 20, 2.0, 3.0),
+            H(3, "r", 10, 4.0, 5.0)]
+    ok, why = check_history_linearizable(hist)
+    assert not ok
+    # ...and the same shape through the large-history engine
+    ok2, _ = _check_unique_writes(1, hist)
+    assert not ok2
+
+
+def test_future_read_rejected():
+    # read completes before the write it returned was even invoked
+    hist = [H(1, "r", 10, 0.0, 1.0), H(2, "w", 10, 2.0, 3.0)]
+    ok, why = check_history_linearizable(hist)
+    assert not ok and "invoked only after" in why
+
+
+def test_read_of_unwritten_value_rejected():
+    hist = [H(1, "w", 10, 0.0, 1.0), H(2, "r", 99, 2.0, 3.0)]
+    ok, why = check_history_linearizable(hist)
+    assert not ok and "no committed write" in why
+
+
+def test_stale_none_read_rejected():
+    # a read of the initial state invoked after a write fully completed
+    hist = [H(1, "w", 10, 0.0, 1.0), H(2, "r", None, 2.0, 3.0)]
+    ok, why = check_history_linearizable(hist)
+    assert not ok, why
+
+
+def test_read_order_cycle_rejected():
+    # reads force w10 -> w20 (read 3 of 20 precedes read 4 of 10 reversed):
+    # r(20) wholly before r(10) forces 20 < 10, but w10 wholly before w20
+    # forces 10 < 20 — no linearization
+    hist = [H(1, "w", 10, 0.0, 1.0), H(2, "w", 20, 2.0, 3.0),
+            H(3, "r", 20, 4.0, 5.0), H(4, "r", 10, 6.0, 7.0)]
+    ok, why = check_history_linearizable(hist)
+    assert not ok, why
+
+
+def test_duplicate_write_values_use_earliest_write():
+    """Regression: with duplicate write values, a read may have been
+    served by ANY write of that value — the future-read quick check must
+    compare against the earliest one, not the last."""
+    hist = [H(1, "w", 5, 0.0, 1.0), H(2, "r", 5, 2.0, 3.0),
+            H(3, "w", 5, 10.0, 11.0)]
+    ok, why = check_history_linearizable(hist)
+    assert ok, why
+    # ...while a read that precedes EVERY write of its value still fails
+    bad = [H(1, "r", 5, 0.0, 1.0), H(2, "w", 5, 2.0, 3.0),
+           H(3, "w", 5, 10.0, 11.0)]
+    ok, why = check_history_linearizable(bad)
+    assert not ok, why
+
+
+def test_quick_reject_matches_search():
+    bad = [H(1, "w", 10, 0.0, 1.0), H(2, "w", 20, 2.0, 3.0),
+           H(3, "r", 10, 4.0, 5.0)]
+    ok, _ = _quick_reject(1, bad)
+    if ok:  # quick filter may pass; the search must still reject
+        assert not _search(1, sorted(bad, key=lambda h: h.invoke),
+                           [0], 10_000)
+
+
+# ---------------------------------------------------------------------------
+# Engine cross-check: W&G search vs reign decomposition
+# ---------------------------------------------------------------------------
+
+def _random_history(rng, n_ops, corrupt):
+    """Register timeline with random interval slack; optionally corrupt
+    one read to a random earlier write's value."""
+    t, state, entries = 0.0, None, []
+    values = []
+    for i in range(n_ops):
+        t += float(rng.uniform(0.1, 1.0))
+        inv = t - float(rng.uniform(0.0, 2.0))
+        resp = t + float(rng.uniform(0.0, 2.0))
+        if rng.random() < 0.6 or not values:
+            state = 1000 + i
+            values.append(state)
+            entries.append(H(i, "w", state, inv, resp))
+        else:
+            entries.append(H(i, "r", state, inv, resp))
+    if corrupt:
+        ridx = [i for i, h in enumerate(entries) if h.kind == "r"]
+        if ridx:
+            i = ridx[int(rng.integers(0, len(ridx)))]
+            h = entries[i]
+            entries[i] = H(h.op_id, "r",
+                           values[int(rng.integers(0, len(values)))],
+                           h.invoke, h.response)
+    return entries
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 24), st.integers(0, 1))
+def test_engines_agree_on_random_histories(seed, n_ops, corrupt):
+    rng = np.random.default_rng(seed)
+    entries = _random_history(rng, n_ops, bool(corrupt))
+    ordered = sorted(entries, key=lambda h: (h.invoke, h.response, h.op_id))
+    ok_quick, _ = _quick_reject(1, ordered)
+    if not ok_quick:
+        return       # both engines require the quick filter first
+    ok_wg = _search(1, ordered, [0], 500_000)
+    ok_grp, _ = _check_unique_writes(1, ordered)
+    assert ok_wg == ok_grp, (seed, n_ops, corrupt)
+
+
+def test_large_object_uses_reign_decomposition():
+    # a pile-up far beyond SEARCH_MAX_OPS must verify instantly
+    n = SEARCH_MAX_OPS * 20
+    hist = [H(i, "w", i, 0.0, 100.0) for i in range(n)]
+    hist.append(H(n, "r", 5, 0.0, 100.0))
+    ok, why = check_object_linearizable(1, hist)
+    assert ok, why
+
+
+# ---------------------------------------------------------------------------
+# Mutation checks: injected bugs must be caught
+# ---------------------------------------------------------------------------
+
+class BrokenOrderWoc(WocReplica):
+    """Commit-ordering bug: odd replicas apply every commit batch in
+    reverse and ignore dependency edges, so same-batch ops on one object
+    apply in divergent orders across replicas."""
+
+    def apply_commit_batch(self, ops, deps, now, path):
+        if self.node_id % 2:
+            ops = list(reversed(ops))
+        super().apply_commit_batch(ops, {}, now, path)
+
+
+class LocalReadWoc(WocReplica):
+    """Client-visible bug: serve reads from the local store at ingress,
+    skipping consensus (the classic stale-read shortcut)."""
+
+    def on_client_req(self, msg, now):
+        ops = msg.payload["ops"]
+        for op in ops:
+            if op.kind == "r":
+                if op.commit_time < 0:
+                    op.read_result = self.rsm.store.get(op.obj)
+                    op.commit_time = now
+                    op.path = "fast"
+                self.credit_op(msg.src, msg.payload["batch_id"], op.op_id)
+        msg.payload["ops"] = [op for op in ops if op.kind == "w"]
+        super().on_client_req(msg, now)
+
+
+CONTENTION = Workload(p_independent=0.3, p_common=0.2, p_hot=0.5,
+                      n_hot_objects=2, n_common_objects=8,
+                      reads_fraction=0.3)
+
+
+def _with_protocol(name, cls):
+    runner_mod.PROTOCOLS[name] = cls
+    return name
+
+
+@pytest.fixture(autouse=True)
+def _clean_protocols():
+    yield
+    for k in ("woc_broken", "woc_localread"):
+        runner_mod.PROTOCOLS.pop(k, None)
+
+
+def test_mutation_commit_ordering_bug_is_caught():
+    name = _with_protocol("woc_broken", BrokenOrderWoc)
+    art = run(RunConfig(protocol=name, total_ops=3000, batch_size=5,
+                        n_clients=4, workload=CONTENTION, seed=0,
+                        capture_history=True))
+    ok, why = verify_artifacts(art)
+    assert not ok, "reversed-batch apply order must fail verification"
+    assert "divergent" in why or "linearization" in why or "inversion" in why
+
+
+def test_mutation_unmutated_baseline_passes():
+    art = run(RunConfig(protocol="woc", total_ops=3000, batch_size=5,
+                        n_clients=4, workload=CONTENTION, seed=0,
+                        capture_history=True))
+    ok, why = verify_artifacts(art)
+    assert ok, why
+
+
+def test_mutation_local_read_bug_caught_under_partition():
+    """The stale-local-read shortcut survives fault-free runs (staleness
+    is sub-millisecond — below client RTT, so never a strict real-time
+    violation) but a partition widens the window to macroscopic: the cut
+    replica keeps serving frozen state to clients while the majority
+    commits writes. The history checker alone — no replica state — must
+    catch it. This is the regime the nemesis exists to exercise."""
+    name = _with_protocol("woc_localread", LocalReadWoc)
+    art = run(RunConfig(protocol=name, total_ops=12000, batch_size=5,
+                        n_clients=4, workload=CONTENTION, seed=0,
+                        faults=sym_partition(0.05, 0.3, side=(2,))))
+    ok, why = check_history_linearizable(art.result.history)
+    assert not ok, "stale local reads behind a partition must be caught"
+
+
+def test_history_capture_on_runresult():
+    art = run(RunConfig(protocol="woc", total_ops=1000, batch_size=10,
+                        capture_history=True))
+    hist = art.result.history
+    assert len(hist) == 1000
+    assert hist == sorted(hist, key=lambda h: (h.invoke, h.op_id))
+    assert capture_history(art.clients) == hist
+    # off by default: the plain run pays nothing
+    art2 = run(RunConfig(protocol="woc", total_ops=500, batch_size=10))
+    assert art2.result.history == []
