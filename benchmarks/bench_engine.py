@@ -39,8 +39,7 @@ import time
 
 from benchmarks.common import Claims, calibration_score, write_json
 
-from repro.core.runner import RunConfig
-from repro.core.runner import run as run_experiment
+from repro.scenario import Scenario, run_scenario
 
 # pre-PR engine (commit b40ecf8) on the reference scenario: best-of-4,
 # events / total wall, measured in one session together with the
@@ -63,8 +62,8 @@ SECONDARY = dict(protocol="woc", n_replicas=9, n_clients=4, batch_size=10,
                  t_fail=2, seed=0)
 
 
-def _reference_cfg(total_ops: int) -> RunConfig:
-    return RunConfig(total_ops=total_ops, **REFERENCE)
+def _reference_cfg(total_ops: int) -> Scenario:
+    return Scenario(total_ops=total_ops, **REFERENCE)
 
 
 def _trace_sig(art) -> tuple:
@@ -80,7 +79,7 @@ def _measure(cfg_kw: dict, total: int, repeats: int) -> dict:
     best = None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        art = run_experiment(RunConfig(total_ops=total, **cfg_kw))
+        art = run_scenario(Scenario(total_ops=total, **cfg_kw))
         wall = time.perf_counter() - t0
         r = art.result
         point = {
@@ -109,15 +108,15 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
     total = 10_000 if quick else 40_000
     repeats = 2 if quick else 4
 
-    run_experiment(_reference_cfg(2_000))    # warm imports/allocator
+    run_scenario(_reference_cfg(2_000))    # warm imports/allocator
     probe = calibration_score()
     scale = probe / BASELINE_PROBE_SCORE
     best = _measure(REFERENCE, total, repeats)
     secondary = _measure(SECONDARY, total // 4, repeats)
 
     # determinism spot-check rides along: two fresh runs, same seed
-    sig_a = _trace_sig(run_experiment(_reference_cfg(2_000)))
-    sig_b = _trace_sig(run_experiment(_reference_cfg(2_000)))
+    sig_a = _trace_sig(run_scenario(_reference_cfg(2_000)))
+    sig_b = _trace_sig(run_scenario(_reference_cfg(2_000)))
 
     evs = best["events_per_sec_total_wall"]
     speedup = evs / (BASELINE_EVENTS_PER_SEC * scale)

@@ -21,10 +21,9 @@ recovery curve is worthless.
 
 from benchmarks.common import Claims, write_csv, write_json
 
-from repro.core.runner import RunConfig
-from repro.core.runner import run as run_experiment
 from repro.core.simulator import Workload
 from repro.faults import Crash, Degrade, Recover
+from repro.scenario import Scenario, run_scenario
 from repro.verify import (check_history_linearizable, effective_downtime,
                           recovery_report)
 
@@ -34,9 +33,9 @@ WORKLOAD = Workload(p_independent=0.8, p_common=0.1, p_hot=0.1,
 
 def _scenario(proto: str, name: str, faults, fault_at: float,
               total_ops: int, claims: Claims) -> dict:
-    art = run_experiment(
-        RunConfig(protocol=proto, total_ops=total_ops, batch_size=10,
-                  n_clients=4, workload=WORKLOAD, faults=faults, seed=5))
+    art = run_scenario(
+        Scenario(protocol=proto, total_ops=total_ops, batch_size=10,
+                 n_clients=4, workload=WORKLOAD, faults=faults, seed=5))
     r = art.result
     ok, why = check_history_linearizable(r.history)
     claims.check(f"{proto}/{name}: all ops commit, history linearizable",

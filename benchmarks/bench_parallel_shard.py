@@ -30,12 +30,21 @@ import os
 
 from benchmarks.common import Claims, calibration_score, paired_ab, write_json
 
-from repro.shard import (ShardedRunConfig, lookahead_of,
-                         non_telemetry_metrics as _metrics, run_sharded)
+from repro.scenario import Scenario, Sharding, run_scenario
+from repro.shard import lookahead_of, non_telemetry_metrics as _metrics
 
 REFERENCE = dict(protocol="woc", n_groups=8, n_replicas_per_group=5,
                  n_clients_per_group=2, batch_size=10, locality="uniform",
                  seed=3)
+
+
+def _scenario(cfg: dict, workers: int) -> Scenario:
+    return Scenario(
+        protocol=cfg["protocol"], n_replicas=cfg["n_replicas_per_group"],
+        n_clients=cfg["n_clients_per_group"], batch_size=cfg["batch_size"],
+        total_ops=cfg["total_ops"], seed=cfg["seed"],
+        sharding=Sharding(n_groups=cfg["n_groups"],
+                          locality=cfg["locality"], workers=workers))
 BASE_OPS = 12_000          # per group (matches bench_shard_scaling)
 QUICK_OPS = 3_000
 SPEEDUP_TARGET = 2.0       # on a >= 4-core runner
@@ -50,12 +59,12 @@ def run_bench(out_dir, quick: bool = False, jobs: int = 0) -> list[str]:
     cfg = dict(REFERENCE, total_ops=ops_per_group * REFERENCE["n_groups"])
     workers = jobs if jobs > 0 else min(cfg["n_groups"], cores)
 
-    serial_cfg = ShardedRunConfig(**cfg, workers=1)
-    parallel_cfg = ShardedRunConfig(**cfg, workers=workers)
+    serial_sc = _scenario(cfg, workers=1)
+    parallel_sc = _scenario(cfg, workers=workers)
 
     # determinism first (also warms both paths for the A/B below)
-    serial = run_sharded(serial_cfg).result
-    parallel = run_sharded(parallel_cfg).result
+    serial = run_scenario(serial_sc).result
+    parallel = run_scenario(parallel_sc).result
     identical = _metrics(serial) == _metrics(parallel)
     claims.check(
         "parallel (workers>=2) bit-identical to serial oracle on the "
@@ -76,8 +85,8 @@ def run_bench(out_dir, quick: bool = False, jobs: int = 0) -> list[str]:
     # paired interleaved A/B wall clock (shared harness; no warmup run —
     # the determinism pass above already warmed both paths)
     probe = calibration_score()
-    ab = paired_ab(lambda: run_sharded(serial_cfg),
-                   lambda: run_sharded(parallel_cfg),
+    ab = paired_ab(lambda: run_scenario(serial_sc),
+                   lambda: run_scenario(parallel_sc),
                    repeats=repeats, warmup=False)
     headline = (f"parallel >= {SPEEDUP_TARGET:.0f}x serial wall-clock on "
                 f"the G={cfg['n_groups']} uniform reference")
@@ -98,7 +107,7 @@ def run_bench(out_dir, quick: bool = False, jobs: int = 0) -> list[str]:
         "repeats": repeats,
         "workers": workers,
         "cores": cores,
-        "lookahead_s": lookahead_of(serial_cfg.costs),
+        "lookahead_s": lookahead_of(serial_sc.costs),
         "paired_ab": ab,
         "speedup": ab["ratio"],
         "calibration_probe": round(probe, 1),

@@ -16,32 +16,15 @@ Claims validated:
     occur and throughput beats the stealing-disabled ablation.
 """
 
-from benchmarks.common import Claims, write_csv, write_json
+from benchmarks.common import (Claims, run_point, sharded_point, write_csv,
+                               write_json)
 
-from repro.core.runner import RunConfig
-from repro.core.runner import run as run_flat
 from repro.core.simulator import CostModel
-from repro.shard import ShardedRunConfig, run_sharded
+from repro.scenario import Sharding
 
 GROUPS = [1, 2, 4, 8]
 BASE_OPS = 12_000        # per group, so per-group load is constant
 P_LOCAL = [1.0, 0.9, 0.7, 0.5]
-
-
-def _point(**kw) -> dict:
-    art = run_sharded(ShardedRunConfig(**kw))
-    r = art.result
-    return {"protocol": r.protocol, "groups": r.n_groups,
-            "group_size": r.group_size, "clients": r.n_clients,
-            "batch": r.batch_size, "locality": r.locality,
-            "ops": r.committed_ops, "tx_s": round(r.throughput_tx_s, 1),
-            "p50_ms": round(r.latency_p50_ms, 4),
-            "p99_ms": round(r.latency_p99_ms, 4),
-            "fast_frac": round(r.fast_path_frac, 4),
-            "remote_frac": round(r.remote_frac, 4),
-            "redirect_rate": round(r.redirect_rate, 5),
-            "migrations": r.migrations, "steal_hints": r.steal_hints,
-            "messages": r.messages}
 
 
 def run_bench(out_dir, quick: bool = False) -> list[str]:
@@ -52,16 +35,16 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
     # -- uniform-locality group sweep --------------------------------------
     by_g = {}
     for g in GROUPS:
-        r = _point(n_groups=g, total_ops=base_ops * g, batch_size=10,
-                   locality="uniform", seed=3)
+        r = sharded_point(Sharding(n_groups=g, locality="uniform"),
+                          total_ops=base_ops * g, batch_size=10, seed=3)
         rows.append(r)
         by_g[g] = r["tx_s"]
 
-    flat = run_flat(RunConfig(protocol="woc", total_ops=base_ops,
-                              batch_size=10, seed=3)).result
+    flat = run_point(protocol="woc", total_ops=base_ops, batch_size=10,
+                     seed=3)
     claims.check("Shard G=1 == unsharded committed ops (same seed)",
-                 by_g and rows[0]["ops"] == flat.committed_ops,
-                 f"sharded={rows[0]['ops']} flat={flat.committed_ops}")
+                 by_g and rows[0]["ops"] == flat["ops"],
+                 f"sharded={rows[0]['ops']} flat={flat['ops']}")
     claims.check("Shard G=4 uniform >= 2.5x G=1 aggregate throughput",
                  by_g[4] >= 2.5 * by_g[1],
                  f"G4={by_g[4]:.0f} G1={by_g[1]:.0f} "
@@ -73,8 +56,9 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
     # -- graceful degradation: cross-group traffic sweep at G=4 -------------
     by_p = {}
     for p in P_LOCAL:
-        r = _point(n_groups=4, total_ops=base_ops * 4, batch_size=10,
-                   locality="mixed", p_local=p, steal_threshold=0, seed=3)
+        r = sharded_point(Sharding(n_groups=4, locality="mixed", p_local=p,
+                                   steal_threshold=0),
+                          total_ops=base_ops * 4, batch_size=10, seed=3)
         rows.append(r)
         by_p[p] = r["tx_s"]
     claims.check("Shard degradation is graceful: G=4 at 50% remote "
@@ -87,12 +71,14 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
     # regime WPaxos targets, where serving a client from a remote region
     # caps its open-loop pipeline on RTT
     wan = CostModel(net_remote_client=6e-3)
-    steal = _point(n_groups=4, total_ops=base_ops * 4, batch_size=10,
-                   locality="drift", working_set=12, p_working=0.85,
-                   drift_every=300, steal_threshold=3, seed=7, costs=wan)
-    frozen = _point(n_groups=4, total_ops=base_ops * 4, batch_size=10,
-                    locality="drift", working_set=12, p_working=0.85,
-                    drift_every=300, steal_threshold=0, seed=7, costs=wan)
+    drift = dict(locality="drift", working_set=12, p_working=0.85,
+                 drift_every=300)
+    steal = sharded_point(Sharding(n_groups=4, steal_threshold=3, **drift),
+                          total_ops=base_ops * 4, batch_size=10, seed=7,
+                          costs=wan)
+    frozen = sharded_point(Sharding(n_groups=4, steal_threshold=0, **drift),
+                           total_ops=base_ops * 4, batch_size=10, seed=7,
+                           costs=wan)
     rows += [steal, frozen]
     claims.check("Object stealing migrates the working set "
                  "(migrations > 0, remote fraction below ablation)",

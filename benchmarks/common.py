@@ -21,7 +21,7 @@ import pathlib
 import statistics
 import time
 
-from repro.core.runner import RunConfig, run
+from repro.scenario import Scenario, Sharding, run_scenario
 
 
 def calibration_score(iters: int = 300_000) -> float:
@@ -72,10 +72,13 @@ def paired_ab(run_a, run_b, repeats: int = 3, warmup: bool = True) -> dict:
             "ratio": round(a_med / b_med, 4) if b_med > 0 else float("inf")}
 
 
-def run_point(**kw) -> dict:
+def scenario_point(sc: Scenario) -> dict:
+    """Run one flat Scenario and flatten its result into a sweep row.
+    Every bench suite constructs its runs through here (or
+    :func:`sharded_point`), so the Scenario spec is the single
+    experiment-construction path in the tree."""
     t0 = time.time()
-    art = run(RunConfig(**kw))
-    r = art.result
+    r = run_scenario(sc).result
     return {"protocol": r.protocol, "n": r.n_replicas,
             "clients": r.n_clients, "batch": r.batch_size,
             "tx_s": round(r.throughput_tx_s, 1),
@@ -87,14 +90,37 @@ def run_point(**kw) -> dict:
             "wall_s": round(time.time() - t0, 1)}
 
 
+def run_point(**kw) -> dict:
+    """Scenario fields as kwargs -> one flat sweep row (legacy-shaped
+    helper shared by the §5 figure suites)."""
+    return scenario_point(Scenario(**kw))
+
+
+def sharded_point(sharding: Sharding, **kw) -> dict:
+    """Run one sharded Scenario and flatten its ShardedRunResult into a
+    sweep row (shared by the shard/parallel suites)."""
+    r = run_scenario(Scenario(sharding=sharding, **kw)).result
+    return {"protocol": r.protocol, "groups": r.n_groups,
+            "group_size": r.group_size, "clients": r.n_clients,
+            "batch": r.batch_size, "locality": r.locality,
+            "ops": r.committed_ops, "tx_s": round(r.throughput_tx_s, 1),
+            "p50_ms": round(r.latency_p50_ms, 4),
+            "p99_ms": round(r.latency_p99_ms, 4),
+            "fast_frac": round(r.fast_path_frac, 4),
+            "remote_frac": round(r.remote_frac, 4),
+            "redirect_rate": round(r.redirect_rate, 5),
+            "migrations": r.migrations, "steal_hints": r.steal_hints,
+            "messages": r.messages}
+
+
 def write_csv(out_dir, name: str, rows: list[dict]) -> pathlib.Path:
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     path = out / f"{name}.csv"
     if rows:
-        cols = list(rows[0])
+        cols = list(dict.fromkeys(c for r in rows for c in r))
         lines = [",".join(cols)]
-        lines += [",".join(str(r[c]) for c in cols) for r in rows]
+        lines += [",".join(str(r.get(c, "")) for c in cols) for r in rows]
         path.write_text("\n".join(lines) + "\n")
     return path
 

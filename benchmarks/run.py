@@ -25,7 +25,7 @@ from benchmarks import (bench_batch_size, bench_client_scaling,
                         bench_fault_recovery, bench_grad_quorum,
                         bench_parallel_shard, bench_quorum_kernel,
                         bench_server_scaling, bench_shard_scaling,
-                        bench_weights)
+                        bench_weights, bench_workloads)
 
 SUITES = [
     ("engine", bench_engine),
@@ -36,6 +36,7 @@ SUITES = [
     ("batch_size", bench_batch_size),
     ("client_scaling", bench_client_scaling),
     ("server_scaling", bench_server_scaling),
+    ("workloads", bench_workloads),
     ("shard_scaling", bench_shard_scaling),
     ("parallel", bench_parallel_shard),
     ("faults", bench_fault_recovery),

@@ -1,7 +1,9 @@
 """Quickstart: WOC in 60 seconds.
 
 1. Geometric weights + invariants (paper §3.2, Tables 1-2).
-2. A 5-replica cluster serving a mixed workload: WOC vs Cabinet.
+2. A declarative Scenario: 5 replicas serving a mixed workload, WOC vs
+   Cabinet (the Scenario API is the one experiment surface — cluster,
+   workload, faults, sharding and verification in one spec).
 3. Weighted-quorum math on a batch of operations (the data-plane hot spot).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import weights as W
 from repro.core.quorum import quorum_commit
-from repro.core.runner import RunConfig, run
+from repro.scenario import Scenario, run_scenario
 
 # -- 1. object-weighted quorums ---------------------------------------------
 w = np.asarray(W.geometric_weights(7, 1.40))          # Table 1, ObjA
@@ -25,9 +27,13 @@ print(f"  I1 (progress, t=1): {bool(W.check_invariant_progress(w, 1))}; "
 # -- 2. dual-path consensus under a 90/5/5 workload ---------------------------
 print("\n5 replicas, 2 clients, batch 10, 90% independent objects:")
 for proto in ("woc", "cabinet"):
-    r = run(RunConfig(protocol=proto, total_ops=10_000, batch_size=10)).result
+    sc = Scenario(protocol=proto, total_ops=10_000, batch_size=10)
+    r = run_scenario(sc).result
     print(f"  {proto:8s} {r.throughput_tx_s:8.0f} Tx/s  "
           f"p50 {r.latency_p50_ms:5.2f} ms  fast-path {r.fast_path_frac:.0%}")
+
+# the same Scenario round-trips through JSON (see examples/scenarios/)
+assert Scenario.from_json(sc.to_json()) == sc
 
 # -- 3. batched quorum commit (the Pallas kernel's math) ----------------------
 arrivals = jnp.array([[1.0, 3.0, 2.0, jnp.inf, 4.0],

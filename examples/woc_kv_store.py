@@ -1,33 +1,40 @@
 """End-to-end driver: a replicated KV store on WOC, with a mid-run leader
-crash, recovery via state transfer, and a full safety audit.
+crash, recovery via state transfer, and a full safety audit — all
+declared in one Scenario.
 
 This is the paper's system doing its actual job: 7 heterogeneous replicas,
 4 clients issuing reads+writes over independent/common/hot objects, the
 initial slow-path leader killed at t=100ms and recovered at t=400ms.
+``check_linearizable`` makes run_scenario verify the captured history
+before returning (it raises on violation); the RSM-level audits below
+cross-check replica state directly.
 
 Run:  PYTHONPATH=src python examples/woc_kv_store.py
 """
 
 from repro.core.rsm import (check_linearizability, check_state_machine_safety,
                             history_from_ops)
-from repro.core.runner import RunConfig, run
 from repro.core.simulator import Workload
+from repro.faults import Crash, Recover
+from repro.scenario import Scenario, Verification, run_scenario
 
-cfg = RunConfig(
+sc = Scenario(
     protocol="woc", n_replicas=7, n_clients=4, batch_size=20,
     total_ops=30_000, t_fail=2,
     workload=Workload(p_independent=0.8, p_common=0.1, p_hot=0.1,
                       n_hot_objects=4, reads_fraction=0.25),
-    crash_at=0.10, recover_at=0.40,
+    faults=(Crash(0.10, "leader"), Recover(0.40, "leader")),
+    verify=Verification(capture_history=True, check_linearizable=True),
 )
 print("running 7-replica WOC KV store with leader crash @100ms ...")
-art = run(cfg)
+art = run_scenario(sc)
 r = art.result
 
 print(f"\ncommitted {r.committed_ops} ops in {r.makespan_s:.2f}s "
       f"({r.throughput_tx_s:.0f} Tx/s)")
 print(f"latency p50/p99: {r.latency_p50_ms:.2f}/{r.latency_p99_ms:.2f} ms; "
       f"fast-path {r.fast_path_frac:.0%}")
+print("history linearizable:                  OK (checked by run_scenario)")
 
 rsms = [rep.rsm for rep in art.replicas]
 ok, why = check_state_machine_safety(rsms)

@@ -4,8 +4,11 @@ Public surface:
   * weights         — geometric weight assignment + invariants (§3.1-3.2)
   * quorum          — vectorized weighted-quorum commit math
   * object_manager  — classification + routing (§3.3)
-  * woc / cabinet / epaxos / paxos — protocol node implementations (§4)
-  * simulator / runner — deterministic cluster simulation (§5 substrate)
+  * woc / cabinet / epaxos — protocol node implementations (§4); the
+    protocol registry (repro.scenario.registry) maps names incl. "paxos"
+    (Cabinet with flat weights) to classes + capability metadata
+  * simulator / runner — deterministic cluster simulation (§5 substrate);
+    runner is the legacy RunConfig shim over repro.scenario
   * rsm             — replicated state machine + linearizability checking
 """
 

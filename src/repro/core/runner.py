@@ -1,37 +1,43 @@
-"""Experiment runner: build a cluster, drive open-loop clients, collect
-metrics. This is the harness behind every §5 benchmark."""
+"""Legacy experiment surface: ``RunConfig`` + ``run()``.
+
+Since the Scenario API landed, this module is a thin compatibility
+layer: ``run(cfg)`` lowers the config onto a declarative
+:class:`repro.scenario.Scenario` and hands it to ``run_scenario`` — the
+single construction path shared with the sharded runner. New code
+should build Scenarios directly (see repro.scenario); this surface stays
+because a decade of tests, benches and muscle memory spell 5-replica
+experiments as ``run(RunConfig(...))``.
+
+Protocol lookup lives in :mod:`repro.scenario.registry` (capability
+metadata instead of string sets). ``PROTOCOLS`` and ``LEADER_BASED``
+below are import-compatible snapshots for old call sites; consult the
+registry in anything new.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Type
+from typing import List, Optional, Sequence
 
-from repro.core.cabinet import CabinetReplica, PaxosReplica
-from repro.core.epaxos import EPaxosReplica
 from repro.core.protocol_base import BaseReplica
 from repro.core.simulator import (Client, CostModel, RunResult, Simulation,
-                                  Workload, collect_metrics)
-from repro.core.woc import WocReplica
-from repro.faults import compile_schedule
+                                  Workload)
+from repro.scenario.registry import (protocol_class, protocol_info,
+                                     protocol_names, protocols_with)
 
-PROTOCOLS: Dict[str, Type[BaseReplica]] = {
-    "woc": WocReplica,
-    "cabinet": CabinetReplica,
-    "epaxos": EPaxosReplica,
-    "paxos": PaxosReplica,
-}
-
-# protocols whose clients must contact the single (initial) leader
-LEADER_BASED = {"cabinet", "paxos"}
+# deprecated compatibility snapshots of the registry (taken at import
+# time — protocols registered later do NOT appear; use the registry)
+PROTOCOLS = {name: protocol_class(name) for name in protocol_names()}
+LEADER_BASED = set(protocols_with(leader_based=True))
 
 
 def client_target_fn(protocol: str, ci: int, n: int, offset: int = 0):
     """Replica-choice policy for client ``ci`` over a group of ``n``
-    replicas whose ids start at ``offset``. Leader-based protocols pin the
-    group's initial leader; the rest round-robin. Shared with the sharded
-    runner (src/repro/shard), where ``offset`` selects the owning group's
-    id block."""
-    if protocol in LEADER_BASED:
+    replicas whose ids start at ``offset``. Protocols whose registry
+    capability says ``leader_based`` pin the group's initial leader; the
+    rest round-robin. Shared with the sharded runner (src/repro/shard),
+    where ``offset`` selects the owning group's id block."""
+    if protocol_info(protocol).leader_based:
         return lambda k: offset                       # initial leader
     return lambda k, ci=ci: offset + (ci + k) % n     # round-robin
 
@@ -48,7 +54,9 @@ class RunConfig:
     workload: Workload = dataclasses.field(default_factory=Workload)
     costs: CostModel = dataclasses.field(default_factory=CostModel)
     seed: int = 0
-    crash_at: Optional[float] = None    # crash the initial leader at t
+    # deprecated: folded into the declarative fault schedule by the
+    # Scenario converter (Crash/Recover events targeting replica 0)
+    crash_at: Optional[float] = None
     recover_at: Optional[float] = None
     sim_time_cap: float = 300.0
     # declarative fault schedule (repro.faults events), compiled onto the
@@ -67,45 +75,7 @@ class RunArtifacts:
 
 
 def run(cfg: RunConfig) -> RunArtifacts:
-    sim = Simulation(cfg.n_replicas, cfg.costs, seed=cfg.seed)
-    cls = PROTOCOLS[cfg.protocol]
-    t = max(1, min(cfg.t_fail, (cfg.n_replicas - 1) // 2))
-    replicas = [cls(i, sim, t_fail=t, group_cap=max(cfg.batch_size, 1))
-                for i in range(cfg.n_replicas)]
-    for rep in replicas:
-        sim.add_node(rep)
-        rep.start_heartbeats()
-
-    total_batches = max(1, cfg.total_ops // max(1, cfg.batch_size))
-    base, rem = divmod(total_batches, cfg.n_clients)
-
-    clients = []
-    for ci in range(cfg.n_clients):
-        c = Client(cfg.n_replicas + ci, sim, batch_size=cfg.batch_size,
-                   max_inflight=cfg.max_inflight, workload=cfg.workload,
-                   target_fn=client_target_fn(cfg.protocol, ci,
-                                              cfg.n_replicas),
-                   total_batches=max(1, base + (1 if ci < rem else 0)),
-                   value_seed=cfg.seed)
-        sim.add_node(c)
-        clients.append(c)
-
-    if cfg.crash_at is not None:
-        sim.crash(0, cfg.crash_at)
-    if cfg.recover_at is not None:
-        sim.recover(0, cfg.recover_at)
-    if cfg.faults:
-        compile_schedule(sim, cfg.faults, n_replicas=cfg.n_replicas)
-
-    for c in clients:
-        c.start()
-    # clients bump sim.clients_done exactly once on completion, so the
-    # per-event stop check is a counter compare, not an all() scan
-    sim.run(until=cfg.sim_time_cap, stop_when_clients_done=len(clients))
-
-    result = collect_metrics(cfg.protocol, sim, clients, cfg.batch_size,
-                             t_start=0.0)
-    if cfg.capture_history or cfg.faults:
-        from repro.verify import capture_history
-        result.history = capture_history(clients)
-    return RunArtifacts(result, sim, replicas, clients)
+    # lazy: repro.scenario.build imports this module's names
+    from repro.scenario.build import run_scenario
+    from repro.scenario.spec import Scenario
+    return run_scenario(Scenario.from_run_config(cfg))

@@ -722,7 +722,13 @@ class Simulation(EventEngine):
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """Operation mix (paper §5.1 default: 90/5/5 independent/common/hot)."""
+    """The paper-mix workload generator (§5.1 default: 90/5/5
+    independent/common/hot). This is the reference implementation of the
+    generator contract every Scenario workload satisfies (see
+    :mod:`repro.scenario.workloads`): ``sample_object`` + ``sample_kind``
+    each consume a fixed number of rng draws per op, and the default
+    mix's draw sequence is contractual — the Scenario golden pins assert
+    bit-identical runs across refactors."""
 
     p_independent: float = 0.90
     p_common: float = 0.05
@@ -743,6 +749,11 @@ class Workload:
         if u < self.p_independent + self.p_common:
             return (1 << 60) | int(rng.random() * self.n_common_objects)
         return (1 << 61) | int(rng.random() * self.n_hot_objects)
+
+    def sample_kind(self, client: int, rng: np.random.Generator) -> str:
+        # always one draw, even at reads_fraction=0: sweeping the read
+        # fraction must not re-key the object stream
+        return "r" if rng.random() < self.reads_fraction else "w"
 
 
 class Client(Node):
@@ -768,6 +779,13 @@ class Client(Node):
         self.batch_size = batch_size
         self.max_inflight_ops = max_inflight * batch_size
         self.workload = workload
+        # open-loop arrival shaping (repro.scenario.workloads contract):
+        # absent on the classic mixes, so the default submit loop is
+        # untouched; when present, _maybe_submit idles between bursts
+        self._gap_fn = getattr(workload, "submit_gap", None)
+        self._gap_paid = -1          # last batch index whose gap was paid
+        self._gap_wait = False       # gap timer pending: acks must not
+                                     # sneak submissions past the idle
         self.target_fn = target_fn   # attempt counter -> replica to contact
         self.total = total_batches
         self.submitted = 0
@@ -808,7 +826,7 @@ class Client(Node):
     def _make_batch(self) -> List[Op]:
         ops = []
         rng = self.rng
-        reads = self.workload.reads_fraction
+        kind_of = self.workload.sample_kind
         now = self.sim.now
         node_id = self.node_id
         value_seed = self.value_seed
@@ -816,7 +834,7 @@ class Client(Node):
             oid = (node_id << 40) | self._next_op
             self._next_op += 1
             obj = self._sample_object()
-            kind = "r" if rng.random() < reads else "w"
+            kind = kind_of(node_id, rng)
             ops.append(Op(oid, node_id, obj, kind, oid ^ value_seed, now))
         return ops
 
@@ -838,9 +856,22 @@ class Client(Node):
                                       {"bid": bid})
 
     def _maybe_submit(self) -> None:
+        gap_fn = self._gap_fn
         while (self.submitted < self.total
                and self.inflight_ops + self.batch_size
                <= self.max_inflight_ops):
+            if gap_fn is not None:
+                if self._gap_wait:
+                    return
+                if self.submitted != self._gap_paid:
+                    g = gap_fn(self.node_id, self.submitted, self.rng)
+                    self._gap_paid = self.submitted
+                    if g > 0.0:
+                        # open-loop burst gap: resume via timer; the paid
+                        # marker keeps the resumed call from re-charging it
+                        self._gap_wait = True
+                        self.set_timer(g, "submit_gap", {})
+                        return
             ops = self._make_batch()
             self.ops.extend(ops)
             self.submitted += 1
@@ -887,6 +918,10 @@ class Client(Node):
         return target
 
     def on_timer(self, name: str, payload: dict, now: float) -> None:
+        if name == "submit_gap":
+            self._gap_wait = False
+            self._maybe_submit()
+            return
         rec = self._open.get(payload["bid"])
         if rec is None:
             return

@@ -1,0 +1,115 @@
+"""run_scenario(): the one entrypoint that lowers a Scenario onto the
+simulator.
+
+Flat scenarios (``sharding is None``) build the classic single-group
+deployment — ``Simulation`` + protocol replicas + open-loop ``Client``s
+— exactly as the legacy ``run(RunConfig)`` did (the Scenario golden pins
+assert bit-for-bit identity). Sharded scenarios lower onto
+``ShardedRunConfig`` and reuse the shard runner's shared builders; with
+``Sharding.workers >= 2`` the conservative parallel engine takes over
+unchanged.
+
+Return type mirrors the legacy surfaces: ``RunArtifacts`` for flat runs,
+``ShardedRunArtifacts`` for sharded ones — both carry ``.result``, which
+is all the bench/refine loops consume.
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+from repro.core.runner import RunArtifacts, client_target_fn
+from repro.core.simulator import Client, Simulation, collect_metrics
+from repro.faults import compile_schedule
+from repro.scenario.registry import protocol_class
+from repro.scenario.spec import Scenario
+from repro.shard.runner import (ShardedRunArtifacts, ShardedRunConfig,
+                                run_sharded_config)
+
+
+def lower_sharded(sc: Scenario) -> ShardedRunConfig:
+    """The sharded run plan: a Scenario flattened onto the internal
+    ShardedRunConfig carrier (also what parallel workers unpickle)."""
+    sh = sc.sharding
+    return ShardedRunConfig(
+        protocol=sc.protocol, n_groups=sh.n_groups,
+        n_replicas_per_group=sc.n_replicas,
+        n_clients_per_group=sc.n_clients, batch_size=sc.batch_size,
+        max_inflight=sc.max_inflight, total_ops=sc.total_ops,
+        t_fail=sc.t_fail, locality=sh.locality, p_local=sh.p_local,
+        working_set=sh.working_set, p_working=sh.p_working,
+        drift_every=sh.drift_every, steal_threshold=sh.steal_threshold,
+        steal_cooldown=sh.steal_cooldown, workload=sc.workload,
+        costs=sc.costs, seed=sc.seed, sim_time_cap=sc.sim_time_cap,
+        workers=sh.workers, faults=sc.faults,
+        capture_history=sc.verify.capture_history)
+
+
+def run_scenario(sc: Scenario) -> Union[RunArtifacts,
+                                        ShardedRunArtifacts]:
+    """Run a validated Scenario. Flat specs return :class:`RunArtifacts`,
+    sharded specs :class:`ShardedRunArtifacts`; ``artifacts.result``
+    carries the metrics either way."""
+    reset = getattr(sc.workload, "reset", None)
+    if reset is not None:
+        reset()        # stateful generators replay identical streams on
+                       # every run of the same spec
+    if sc.sharding is not None:
+        art = run_sharded_config(lower_sharded(sc))
+    else:
+        art = _run_flat(sc)
+    if sc.verify.check_linearizable:
+        _check(art.result)
+    return art
+
+
+def _run_flat(sc: Scenario) -> RunArtifacts:
+    sim = Simulation(sc.n_replicas, sc.costs, seed=sc.seed)
+    cls = protocol_class(sc.protocol)
+    t = max(1, min(sc.t_fail, (sc.n_replicas - 1) // 2))
+    replicas = [cls(i, sim, t_fail=t, group_cap=max(sc.batch_size, 1))
+                for i in range(sc.n_replicas)]
+    for rep in replicas:
+        sim.add_node(rep)
+        rep.start_heartbeats()
+
+    total_batches = max(1, sc.total_ops // max(1, sc.batch_size))
+    base, rem = divmod(total_batches, sc.n_clients)
+
+    clients = []
+    for ci in range(sc.n_clients):
+        c = Client(sc.n_replicas + ci, sim, batch_size=sc.batch_size,
+                   max_inflight=sc.max_inflight, workload=sc.workload,
+                   target_fn=client_target_fn(sc.protocol, ci,
+                                              sc.n_replicas),
+                   total_batches=max(1, base + (1 if ci < rem else 0)),
+                   value_seed=sc.seed)
+        sim.add_node(c)
+        clients.append(c)
+
+    if sc.faults:
+        compile_schedule(sim, sc.faults, n_replicas=sc.n_replicas)
+
+    for c in clients:
+        c.start()
+    # clients bump sim.clients_done exactly once on completion, so the
+    # per-event stop check is a counter compare, not an all() scan
+    sim.run(until=sc.sim_time_cap, stop_when_clients_done=len(clients))
+
+    result = collect_metrics(sc.protocol, sim, clients, sc.batch_size,
+                             t_start=0.0)
+    if sc.verify.capture_history or sc.faults:
+        from repro.verify import capture_history
+        result.history = capture_history(clients)
+    return RunArtifacts(result, sim, replicas, clients)
+
+
+def _check(result) -> None:
+    from repro.verify import check_history_linearizable
+    if not result.history:
+        raise ValueError(
+            "check_linearizable needs a captured history: set "
+            "Verification.capture_history (or schedule faults)")
+    ok, why = check_history_linearizable(result.history)
+    if not ok:
+        raise AssertionError(f"scenario history not linearizable: {why}")

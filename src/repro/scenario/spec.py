@@ -1,0 +1,341 @@
+"""The declarative Scenario spec: one object describing an experiment.
+
+A :class:`Scenario` names everything a run needs — cluster topology and
+cost model, protocol (by registry name), workload generator (by registry
+ref), fault schedule, sharding/parallelism, verification flags — and
+nothing about *how* to run it. ``run_scenario`` (repro.scenario.build)
+is the single entrypoint that lowers a Scenario onto the simulator; the
+legacy ``run(RunConfig)`` / ``run_sharded(ShardedRunConfig)`` surfaces
+are thin converters onto this spec.
+
+Construction is validated (``__post_init__``): contradictions — a fault
+schedule with parallel workers, an unknown protocol or workload ref, a
+sharded run of an unsharded-only workload — fail fast at build time,
+not 40 000 simulated ops in. ``to_dict``/``from_dict`` (and the JSON
+twins) round-trip losslessly: ``Scenario.from_dict(sc.to_dict()) == sc``.
+
+Legacy compatibility: ``from_dict`` and ``Scenario.from_run_config``
+accept the deprecated ``crash_at``/``recover_at`` knobs and fold them
+into the declarative fault schedule (a ``Crash``/``Recover`` event pair
+targeting replica 0 — exactly the wiring ``run()`` used to hand-roll).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Optional, Tuple
+
+from repro.core.simulator import CostModel, Workload
+from repro.faults import (Crash, Degrade, Heal, Partition, Recover,
+                          resolve_node)
+from repro.scenario.registry import protocol_info
+from repro.scenario.workloads import make_workload, workload_ref
+
+LOCALITIES = ("uniform", "mixed", "drift")
+
+# workload kinds that only make sense on a flat (unsharded) cluster —
+# the sharded equivalent is the Sharding spec's locality machinery
+UNSHARDED_ONLY_WORKLOADS = ("hotspot_drift",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sharding:
+    """Object-space partitioning + execution parallelism. ``n_groups=1``
+    still runs the sharded machinery (gates, router clients) — the G=1
+    equivalence tests pin it bit-identical to the flat path. ``workers``:
+    1 = serial single-heap oracle, >=2 = per-group parallel engines,
+    0 = auto (min(groups, cores); resolves to serial when faults are
+    scheduled)."""
+
+    n_groups: int = 2
+    locality: str = "uniform"
+    p_local: float = 0.9
+    working_set: int = 16
+    p_working: float = 0.85
+    drift_every: int = 400
+    steal_threshold: int = 3           # remote hits per hint; <=0 disables
+    steal_cooldown: float = 0.25
+    workers: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Verification:
+    """Post-run checking. ``capture_history`` records the client
+    invoke/response history on the result (implied by any fault
+    schedule); ``check_linearizable`` additionally runs the
+    repro.verify history checker after the run and raises on violation
+    (requires a protocol whose read path is verified when the workload
+    issues reads — validated at construction)."""
+
+    capture_history: bool = False
+    check_linearizable: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    protocol: str = "woc"
+    n_replicas: int = 5                # per group when sharded
+    n_clients: int = 2                 # per group when sharded
+    t_fail: int = 1
+    batch_size: int = 10
+    max_inflight: int = 5              # paper §5.1 open-loop cap
+    total_ops: int = 40_000            # across all clients (all groups)
+    seed: int = 0
+    sim_time_cap: float = 300.0
+    workload: object = dataclasses.field(default_factory=Workload)
+    costs: CostModel = dataclasses.field(default_factory=CostModel)
+    faults: Tuple = ()
+    sharding: Optional[Sharding] = None
+    verify: Verification = dataclasses.field(default_factory=Verification)
+
+    # -- validation (fail fast at construction) -----------------------------
+
+    def __post_init__(self):
+        info = _value_error(lambda: protocol_info(self.protocol))
+        for name, lo in (("n_replicas", 1), ("n_clients", 1),
+                         ("t_fail", 1), ("batch_size", 1),
+                         ("max_inflight", 1), ("total_ops", 1)):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < lo:
+                raise ValueError(f"{name} must be an int >= {lo}, "
+                                 f"got {v!r}")
+        if not self.sim_time_cap > 0:
+            raise ValueError(f"sim_time_cap must be > 0, "
+                             f"got {self.sim_time_cap!r}")
+        wl = self.workload
+        if not (callable(getattr(wl, "sample_object", None))
+                and callable(getattr(wl, "sample_kind", None))):
+            raise ValueError(
+                f"workload {wl!r} does not satisfy the generator contract "
+                f"(sample_object/sample_kind; see repro.scenario.workloads)")
+        self._validate_faults()
+        sh = self.sharding
+        if sh is not None:
+            if not isinstance(sh, Sharding):
+                raise ValueError(f"sharding must be a Sharding spec, "
+                                 f"got {sh!r}")
+            if sh.n_groups < 1:
+                raise ValueError(f"n_groups must be >= 1, "
+                                 f"got {sh.n_groups}")
+            if sh.locality not in LOCALITIES:
+                raise ValueError(f"unknown locality {sh.locality!r} "
+                                 f"(expected one of {LOCALITIES})")
+            if not info.supports_sharding:
+                raise ValueError(
+                    f"protocol {self.protocol!r} does not support "
+                    f"sharding (registry capability supports_sharding="
+                    f"False)")
+            from repro.scenario.workloads import workload_kind_of
+            try:
+                kind = workload_kind_of(wl)
+            except ValueError:
+                kind = None
+            if kind in UNSHARDED_ONLY_WORKLOADS:
+                raise ValueError(
+                    f"workload {kind!r} is unsharded-only; sharded runs "
+                    f"express drift via Sharding(locality='drift')")
+            if self.faults and sh.workers > 1:
+                raise ValueError(
+                    "faults require serial execution (workers=1): the "
+                    "conservative window lookahead does not yet model "
+                    "partitions, so parallel sharded runs cannot replay "
+                    "a fault schedule deterministically")
+            if self.verify.capture_history and sh.workers > 1:
+                raise ValueError(
+                    "history capture requires serial execution "
+                    "(workers=1): the parallel engine does not capture "
+                    "client histories; use workers=1 (or 0, which "
+                    "resolves to serial when capture is requested)")
+        if (self.verify.check_linearizable
+                and not (self.verify.capture_history or self.faults)):
+            raise ValueError(
+                "check_linearizable needs a captured history: set "
+                "Verification.capture_history (or schedule faults, "
+                "which imply capture)")
+        if (self.verify.check_linearizable
+                and getattr(wl, "reads_fraction", 0.0) > 0.0
+                and info.reads != "linearizable"):
+            raise ValueError(
+                f"protocol {self.protocol!r} has an unverified read path "
+                f"(registry reads={info.reads!r}); use a write-only "
+                f"workload or drop check_linearizable")
+
+    def _validate_faults(self) -> None:
+        # node refs must resolve inside the replica id space: the whole
+        # cluster for explicit ids, the group-0 block for symbolic names
+        # (matching compile_schedule's sharded resolution)
+        sh = self.sharding
+        n_total = self.n_replicas * (sh.n_groups if sh else 1)
+        for ev in self.faults:
+            if not isinstance(ev, (Crash, Recover, Partition, Heal,
+                                   Degrade)):
+                raise ValueError(f"not a fault event: {ev!r}")
+            refs = ev.side if isinstance(ev, Partition) else \
+                (ev.node,) if hasattr(ev, "node") else ()
+            for ref in refs:
+                _value_error(lambda ref=ref: resolve_node(
+                    ref, self.n_replicas if isinstance(ref, str)
+                    else n_total))
+
+    # -- dict / JSON round-trip ----------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = {
+            "protocol": self.protocol,
+            "n_replicas": self.n_replicas,
+            "n_clients": self.n_clients,
+            "t_fail": self.t_fail,
+            "batch_size": self.batch_size,
+            "max_inflight": self.max_inflight,
+            "total_ops": self.total_ops,
+            "seed": self.seed,
+            "sim_time_cap": self.sim_time_cap,
+            "workload": workload_ref(self.workload),
+            "costs": dataclasses.asdict(self.costs),
+            "faults": [fault_to_dict(ev) for ev in self.faults],
+            "sharding": (dataclasses.asdict(self.sharding)
+                         if self.sharding is not None else None),
+            "verify": dataclasses.asdict(self.verify),
+        }
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        faults = tuple(fault_from_dict(ev) if isinstance(ev, dict) else ev
+                       for ev in d.pop("faults", ()))
+        crash_at = d.pop("crash_at", None)
+        recover_at = d.pop("recover_at", None)
+        faults = _legacy_crash_faults(crash_at, recover_at) + faults
+        wl = d.pop("workload", None)
+        costs = d.pop("costs", None)
+        sharding = d.pop("sharding", None)
+        verify = d.pop("verify", None)
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = set(d) - known
+        if bad:
+            raise ValueError(f"unknown Scenario fields {sorted(bad)}")
+        return cls(
+            workload=make_workload(wl) if wl is not None else Workload(),
+            costs=(costs if isinstance(costs, CostModel)
+                   else _cost_model_from_dict(costs) if costs is not None
+                   else CostModel()),
+            faults=faults,
+            sharding=(sharding if isinstance(sharding, (Sharding,
+                                                        type(None)))
+                      else Sharding(**sharding)),
+            verify=(verify if isinstance(verify, Verification)
+                    else Verification(**verify) if verify is not None
+                    else Verification()),
+            **d)
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        return cls.from_dict(json.loads(text))
+
+    # -- legacy config conversion --------------------------------------------
+
+    @classmethod
+    def from_run_config(cls, cfg) -> "Scenario":
+        """Lower a legacy ``RunConfig`` onto the Scenario spec (the
+        ``run()`` compatibility path). ``crash_at``/``recover_at`` fold
+        into the declarative fault schedule."""
+        faults = _legacy_crash_faults(cfg.crash_at, cfg.recover_at) \
+            + tuple(cfg.faults)
+        return cls(
+            protocol=cfg.protocol, n_replicas=cfg.n_replicas,
+            n_clients=cfg.n_clients, t_fail=cfg.t_fail,
+            batch_size=cfg.batch_size, max_inflight=cfg.max_inflight,
+            total_ops=cfg.total_ops, seed=cfg.seed,
+            sim_time_cap=cfg.sim_time_cap, workload=cfg.workload,
+            costs=cfg.costs, faults=faults,
+            verify=Verification(capture_history=cfg.capture_history))
+
+    @classmethod
+    def from_sharded_config(cls, cfg) -> "Scenario":
+        """Lower a legacy ``ShardedRunConfig`` onto the Scenario spec
+        (the ``run_sharded()`` compatibility path)."""
+        return cls(
+            protocol=cfg.protocol, n_replicas=cfg.n_replicas_per_group,
+            n_clients=cfg.n_clients_per_group, t_fail=cfg.t_fail,
+            batch_size=cfg.batch_size, max_inflight=cfg.max_inflight,
+            total_ops=cfg.total_ops, seed=cfg.seed,
+            sim_time_cap=cfg.sim_time_cap, workload=cfg.workload,
+            costs=cfg.costs, faults=tuple(cfg.faults),
+            sharding=Sharding(
+                n_groups=cfg.n_groups, locality=cfg.locality,
+                p_local=cfg.p_local, working_set=cfg.working_set,
+                p_working=cfg.p_working, drift_every=cfg.drift_every,
+                steal_threshold=cfg.steal_threshold,
+                steal_cooldown=cfg.steal_cooldown, workers=cfg.workers),
+            verify=Verification(capture_history=cfg.capture_history))
+
+
+# ---------------------------------------------------------------------------
+# Fault event / cost model serialization
+# ---------------------------------------------------------------------------
+
+_FAULT_TYPES = {"crash": Crash, "recover": Recover, "partition": Partition,
+                "heal": Heal, "degrade": Degrade}
+_FAULT_NAMES = {cls: name for name, cls in _FAULT_TYPES.items()}
+
+
+def fault_to_dict(ev) -> dict:
+    name = _FAULT_NAMES.get(type(ev))
+    if name is None:
+        raise ValueError(f"not a serializable fault event: {ev!r}")
+    d = {"type": name}
+    d.update(dataclasses.asdict(ev))
+    if "side" in d:
+        d["side"] = list(d["side"])
+    return d
+
+
+def fault_from_dict(d: dict):
+    d = dict(d)
+    name = d.pop("type", None)
+    cls = _FAULT_TYPES.get(name)
+    if cls is None:
+        raise ValueError(f"unknown fault event type {name!r} "
+                         f"(expected one of {sorted(_FAULT_TYPES)})")
+    if "side" in d:
+        d["side"] = tuple(d["side"])
+    return cls(**d)
+
+
+def _cost_model_from_dict(d: dict) -> CostModel:
+    d = dict(d)
+    for k in ("speeds", "net_dist"):
+        if k in d:
+            d[k] = tuple(d[k])
+    return CostModel(**d)
+
+
+def _legacy_crash_faults(crash_at, recover_at) -> Tuple:
+    if crash_at is None and recover_at is None:
+        return ()
+    warnings.warn(
+        "crash_at/recover_at are deprecated: express failures as "
+        "declarative fault events (repro.faults.Crash/Recover) on "
+        "Scenario.faults / RunConfig.faults",
+        DeprecationWarning, stacklevel=3)
+    events: Tuple = ()
+    if crash_at is not None:
+        events += (Crash(crash_at, 0),)
+    if recover_at is not None:
+        events += (Recover(recover_at, 0),)
+    return events
+
+
+def _value_error(fn):
+    """Normalize registry KeyErrors into ValueError for validation."""
+    try:
+        return fn()
+    except KeyError as exc:
+        raise ValueError(exc.args[0]) from None

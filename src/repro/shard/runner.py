@@ -1,9 +1,12 @@
 """Sharded experiment runner: G independent WOC groups, serial or parallel.
 
-``run_sharded`` builds ``n_groups`` consensus groups (each an unmodified
-protocol cluster behind a shard gate) over a hash-partitioned object
-space, homes ``n_clients_per_group`` router clients at each group, and
-drives the whole deployment deterministically. With ``n_groups=1`` it
+``run_sharded_config`` builds ``n_groups`` consensus groups (each an
+unmodified protocol cluster behind a shard gate) over a hash-partitioned
+object space, homes ``n_clients_per_group`` router clients at each
+group, and drives the whole deployment deterministically. It is the
+execution half of the Scenario API's sharded path; ``run_sharded`` is
+the legacy surface, now a thin converter through
+``repro.scenario.Scenario`` (which is where validation lives). With ``n_groups=1`` it
 reduces to :func:`repro.core.runner.run` (same cost model, same id
 layout, no redirects or migrations) — the G=1 equivalence tests pin that.
 
@@ -34,8 +37,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.runner import PROTOCOLS
 from repro.core.simulator import CostModel, Simulation, Workload
+from repro.scenario.registry import protocol_class
 from repro.shard.gate import GroupGate, make_sharded_replica
 from repro.shard.groupview import GroupNodeProxy, GroupView
 from repro.shard.router import ShardClient, ShardWorkload
@@ -237,7 +240,7 @@ def build_group(sim, cfg: ShardedRunConfig, g: int,
     """Construct group ``g``'s replicas against ``sim`` (a Simulation or a
     partitioned EventEngine) and start their heartbeats."""
     npg = cfg.n_replicas_per_group
-    cls = make_sharded_replica(PROTOCOLS[cfg.protocol])
+    cls = make_sharded_replica(protocol_class(cfg.protocol))
     t = max(1, min(cfg.t_fail, (npg - 1) // 2))
     view = GroupView(sim, g, npg)
     grp = [cls(i, view, gate=gate, t_fail=t,
@@ -280,16 +283,29 @@ def build_client(sim, cfg: ShardedRunConfig, ci: int,
 # ---------------------------------------------------------------------------
 
 def run_sharded(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
+    """Legacy surface: lower the config onto a declarative Scenario
+    (validating it — contradictions like an explicit-parallel fault
+    schedule fail fast there) and run through the shared
+    ``run_scenario`` path."""
+    from repro.scenario.build import run_scenario      # lazy: cycle
+    from repro.scenario.spec import Scenario
+    return run_scenario(Scenario.from_sharded_config(cfg))
+
+
+def run_sharded_config(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
+    """Execute a lowered sharded run plan (the post-validation internal
+    path shared by ``run_scenario`` and, transitively, the legacy
+    ``run_sharded``)."""
     w = resolve_workers(cfg)
-    if cfg.faults and w > 1:
+    if (cfg.faults or cfg.capture_history) and w > 1:
         if cfg.workers == 0:
             w = 1          # auto resolves to the serial oracle
         else:
             raise ValueError(
-                "faults require serial execution (workers=1): the "
-                "conservative window lookahead does not yet model "
-                "partitions, so parallel sharded runs cannot replay a "
-                "fault schedule deterministically")
+                "faults/history capture require serial execution "
+                "(workers=1): the conservative window lookahead does not "
+                "model partitions and the parallel engine does not "
+                "capture client histories")
     if w > 1 and cfg.n_groups > 1:
         from repro.shard.parallel import run_sharded_parallel
         return run_sharded_parallel(cfg, w)

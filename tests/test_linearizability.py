@@ -13,8 +13,9 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import runner as runner_mod
 from repro.core.runner import RunConfig, run
+from repro.scenario import ProtocolInfo, register_protocol
+from repro.scenario.registry import _REGISTRY as _protocol_registry
 from repro.core.simulator import Workload
 from repro.core.woc import WocReplica
 from repro.faults import sym_partition
@@ -235,7 +236,7 @@ CONTENTION = Workload(p_independent=0.3, p_common=0.2, p_hot=0.5,
 
 
 def _with_protocol(name, cls):
-    runner_mod.PROTOCOLS[name] = cls
+    register_protocol(ProtocolInfo(name, cls, leader_based=False))
     return name
 
 
@@ -243,7 +244,7 @@ def _with_protocol(name, cls):
 def _clean_protocols():
     yield
     for k in ("woc_broken", "woc_localread"):
-        runner_mod.PROTOCOLS.pop(k, None)
+        _protocol_registry.pop(k, None)
 
 
 def test_mutation_commit_ordering_bug_is_caught():

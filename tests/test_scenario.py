@@ -1,0 +1,467 @@
+"""Scenario API: round-trip, validation fail-fast, golden pins, registry.
+
+The golden pins are THE contract of the api_redesign PR: the constants
+below were recorded by running the **pre-Scenario** ``run(RunConfig)`` /
+``run_sharded(ShardedRunConfig)`` paths at the seed commit (821464f),
+and the redesigned path must reproduce them bit-for-bit — no re-baseline
+permitted. If one of these fails, the refactor changed simulated timing;
+fix the code, never the constant.
+"""
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core.runner import (LEADER_BASED, PROTOCOLS, RunConfig,
+                               client_target_fn, run)
+from repro.core.simulator import CostModel, Workload
+from repro.faults import Crash, Degrade, Heal, Partition, Recover
+from repro.scenario import (BurstyWorkload, HotspotDriftWorkload,
+                            ProtocolInfo, Scenario, Sharding, Verification,
+                            ZipfWorkload, make_workload, protocol_info,
+                            protocols_with, register_protocol,
+                            register_workload, run_scenario, workload_ref)
+from repro.shard import ShardedRunConfig, run_sharded
+
+
+# ---------------------------------------------------------------------------
+# Golden pins (pre-Scenario seed metrics; see module docstring)
+# ---------------------------------------------------------------------------
+
+GOLDEN_FLAT_WOC = dict(        # RunConfig(protocol="woc", total_ops=2000,
+    committed_ops=2000,        #           batch_size=10, seed=3)
+    makespan_s=0.040969713431704705,
+    throughput_tx_s=48816.54843239117,
+    latency_avg_ms=1.3035649910470413,
+    latency_p50_ms=1.242662486132747,
+    latency_p99_ms=2.813452602624127,
+    fast_path_frac=0.9545,
+    messages=3501)
+
+GOLDEN_FLAT_CABINET = dict(    # same knobs, protocol="cabinet"
+    committed_ops=2000,
+    makespan_s=0.12971771712868987,
+    throughput_tx_s=15418.09433799893,
+    latency_p50_ms=6.0553194258676335,
+    fast_path_frac=0.0,
+    messages=3040)
+
+GOLDEN_SHARDED_DRIFT = dict(   # ShardedRunConfig(n_groups=2,
+    committed_ops=2000,        #   n_replicas_per_group=3, total_ops=2000,
+    makespan_s=0.06748755811196536,  # batch_size=10, locality="drift",
+    throughput_tx_s=29635.09209626308,  # working_set=8, p_working=0.9,
+    latency_p50_ms=5.645318806117558,   # steal_threshold=2, seed=5)
+    fast_path_frac=0.133,
+    messages=3982,
+    migrations=19,
+    redirected_ops=100,
+    remote_frac=0.165,
+    steal_hints=71)
+
+GOLDEN_SHARDED_UNIFORM = dict(  # ShardedRunConfig(n_groups=2,
+    committed_ops=2000,         #   total_ops=2000, batch_size=10, seed=3)
+    makespan_s=0.02649124472521434,
+    throughput_tx_s=75496.64127697262,
+    latency_p50_ms=1.3455711655872165,
+    fast_path_frac=0.9385,
+    messages=4246)
+
+GOLDEN_LEGACY_CRASH = dict(     # RunConfig(protocol="woc", total_ops=3000,
+    committed_ops=3000,         #   batch_size=10, crash_at=0.05,
+    makespan_s=0.47268602465982446,   # recover_at=0.4, seed=0)
+    latency_p99_ms=251.22218468018943,
+    fast_path_frac=0.928,
+    messages=6008)
+
+
+def _assert_golden(result, golden: dict) -> None:
+    for field, want in golden.items():
+        got = getattr(result, field)
+        assert got == want, f"{field}: {got!r} != pinned {want!r}"
+
+
+def test_golden_default_paper_mix_flat():
+    sc = Scenario(protocol="woc", total_ops=2000, batch_size=10, seed=3)
+    _assert_golden(run_scenario(sc).result, GOLDEN_FLAT_WOC)
+
+
+def test_golden_flat_cabinet():
+    sc = Scenario(protocol="cabinet", total_ops=2000, batch_size=10, seed=3)
+    _assert_golden(run_scenario(sc).result, GOLDEN_FLAT_CABINET)
+
+
+def test_golden_legacy_runconfig_path():
+    r = run(RunConfig(protocol="woc", total_ops=2000, batch_size=10,
+                      seed=3)).result
+    _assert_golden(r, GOLDEN_FLAT_WOC)
+
+
+def test_golden_sharded_serial_drift():
+    sc = Scenario(protocol="woc", n_replicas=3, total_ops=2000,
+                  batch_size=10, seed=5,
+                  sharding=Sharding(n_groups=2, locality="drift",
+                                    working_set=8, p_working=0.9,
+                                    steal_threshold=2))
+    _assert_golden(run_scenario(sc).result, GOLDEN_SHARDED_DRIFT)
+
+
+def test_golden_sharded_serial_uniform_both_paths():
+    sc = Scenario(protocol="woc", total_ops=2000, batch_size=10, seed=3,
+                  sharding=Sharding(n_groups=2))
+    _assert_golden(run_scenario(sc).result, GOLDEN_SHARDED_UNIFORM)
+    legacy = run_sharded(ShardedRunConfig(
+        n_groups=2, total_ops=2000, batch_size=10, seed=3)).result
+    _assert_golden(legacy, GOLDEN_SHARDED_UNIFORM)
+
+
+def test_golden_legacy_crash_knobs_fold_into_faults():
+    with pytest.warns(DeprecationWarning, match="crash_at/recover_at"):
+        r = run(RunConfig(protocol="woc", total_ops=3000, batch_size=10,
+                          crash_at=0.05, recover_at=0.4, seed=0)).result
+    _assert_golden(r, GOLDEN_LEGACY_CRASH)
+    # the declarative spelling is the same run, bit for bit
+    sc = Scenario(protocol="woc", total_ops=3000, batch_size=10, seed=0,
+                  faults=(Crash(0.05, 0), Recover(0.4, 0)))
+    _assert_golden(run_scenario(sc).result, GOLDEN_LEGACY_CRASH)
+
+
+# ---------------------------------------------------------------------------
+# dict / JSON round-trip
+# ---------------------------------------------------------------------------
+
+def _kitchen_sink() -> Scenario:
+    return Scenario(
+        protocol="cabinet", n_replicas=7, n_clients=3, t_fail=2,
+        batch_size=20, max_inflight=4, total_ops=12_345, seed=11,
+        sim_time_cap=120.0,
+        workload=Workload(p_independent=0.7, p_common=0.2, p_hot=0.1,
+                          n_hot_objects=6, reads_fraction=0.25),
+        costs=CostModel(net_base=200e-6, timeout=40e-3),
+        faults=(Crash(0.1, "leader"), Recover(0.3, "leader"),
+                Partition(0.5, ("low_weight",), symmetric=False),
+                Heal(0.7), Degrade(0.8, "median", 4.0)),
+        sharding=Sharding(n_groups=4, locality="mixed", p_local=0.8,
+                          steal_threshold=0, workers=1),
+        verify=Verification(capture_history=True))
+
+
+def test_dict_round_trip_equality():
+    sc = _kitchen_sink()
+    assert Scenario.from_dict(sc.to_dict()) == sc
+
+
+def test_json_round_trip_equality():
+    sc = _kitchen_sink()
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+@pytest.mark.parametrize("wl", [
+    Workload(),
+    Workload(p_independent=1.0, p_common=0.0, p_hot=0.0),
+    ZipfWorkload(n_objects=256, theta=1.3, p_private=0.2,
+                 reads_fraction=0.1),
+    HotspotDriftWorkload(n_hot=4, p_hot=0.7, drift_every=500),
+    BurstyWorkload(base=Workload(reads_fraction=0.5), burst_batches=8,
+                   gap_s=0.02),
+])
+def test_workload_round_trip(wl):
+    ref = workload_ref(wl)
+    assert make_workload(ref) == wl
+    sc = Scenario(workload=wl)
+    assert Scenario.from_dict(sc.to_dict()) == sc
+
+
+def test_round_trip_defaults():
+    sc = Scenario()
+    assert Scenario.from_dict(sc.to_dict()) == sc
+    assert sc.to_dict()["workload"]["kind"] == "paper_mix"
+
+
+def test_legacy_dict_keys_convert_with_deprecation():
+    with pytest.warns(DeprecationWarning, match="crash_at/recover_at"):
+        sc = Scenario.from_dict({"protocol": "woc", "crash_at": 0.1,
+                                 "recover_at": 0.2})
+    assert sc.faults == (Crash(0.1, 0), Recover(0.2, 0))
+
+
+# ---------------------------------------------------------------------------
+# Validation fail-fast
+# ---------------------------------------------------------------------------
+
+def test_validation_faults_with_parallel_workers():
+    with pytest.raises(ValueError, match="faults require serial"):
+        Scenario(faults=(Crash(0.1, "leader"),),
+                 sharding=Sharding(n_groups=2, workers=2))
+
+
+def test_validation_faults_with_parallel_workers_via_legacy_surface():
+    with pytest.raises(ValueError, match="faults require serial"):
+        run_sharded(ShardedRunConfig(n_groups=2, workers=2,
+                                     faults=(Crash(0.1, "leader"),)))
+
+
+def test_validation_unknown_protocol():
+    with pytest.raises(ValueError, match="unknown protocol"):
+        Scenario(protocol="raft")
+
+
+def test_validation_unknown_workload_kind():
+    with pytest.raises(ValueError, match="unknown workload kind"):
+        Scenario.from_dict({"workload": {"kind": "nope"}})
+
+
+def test_validation_workload_bad_param():
+    with pytest.raises(ValueError, match="no parameters"):
+        Scenario.from_dict({"workload": {"kind": "zipf", "zeta": 2}})
+
+
+def test_validation_workload_contract():
+    with pytest.raises(ValueError, match="generator contract"):
+        Scenario(workload=object())
+
+
+def test_validation_bad_locality():
+    with pytest.raises(ValueError, match="unknown locality"):
+        Scenario(sharding=Sharding(locality="chaotic"))
+
+
+def test_validation_bad_fault_node_ref():
+    with pytest.raises(ValueError, match="unknown node selector"):
+        Scenario(faults=(Crash(0.1, "fastest"),))
+    with pytest.raises(ValueError, match="out of range"):
+        Scenario(n_replicas=3, faults=(Crash(0.1, 7),))
+
+
+def test_validation_bad_fault_event():
+    with pytest.raises(ValueError, match="not a fault event"):
+        Scenario(faults=("crash the leader",))
+
+
+def test_validation_ranges():
+    with pytest.raises(ValueError, match="n_replicas"):
+        Scenario(n_replicas=0)
+    with pytest.raises(ValueError, match="batch_size"):
+        Scenario(batch_size=0)
+    with pytest.raises(ValueError, match="sim_time_cap"):
+        Scenario(sim_time_cap=0.0)
+    with pytest.raises(ValueError, match="n_groups"):
+        Scenario(sharding=Sharding(n_groups=0))
+
+
+def test_validation_unsharded_only_workload():
+    with pytest.raises(ValueError, match="unsharded-only"):
+        Scenario(workload=HotspotDriftWorkload(),
+                 sharding=Sharding(n_groups=2))
+
+
+def test_validation_unverified_reads_vs_checker():
+    with pytest.raises(ValueError, match="unverified read path"):
+        Scenario(protocol="epaxos",
+                 workload=Workload(reads_fraction=0.2),
+                 verify=Verification(capture_history=True,
+                                     check_linearizable=True))
+    # write-only epaxos with the checker is fine
+    Scenario(protocol="epaxos",
+             verify=Verification(capture_history=True,
+                                 check_linearizable=True))
+
+
+def test_validation_capture_history_with_parallel_workers():
+    with pytest.raises(ValueError, match="history capture requires "
+                                         "serial"):
+        Scenario(sharding=Sharding(n_groups=2, workers=2),
+                 verify=Verification(capture_history=True))
+    # auto (workers=0) resolves to the serial oracle and captures
+    r = run_scenario(Scenario(
+        total_ops=400, batch_size=10, seed=1,
+        sharding=Sharding(n_groups=2, workers=0),
+        verify=Verification(capture_history=True))).result
+    assert r.workers == 1 and len(r.history) == 400
+
+
+def test_validation_checker_requires_capture():
+    with pytest.raises(ValueError, match="needs a captured history"):
+        Scenario(verify=Verification(check_linearizable=True))
+    # faults imply capture, so the checker alone is fine with them
+    Scenario(faults=(Crash(0.1, "leader"),),
+             verify=Verification(check_linearizable=True))
+
+
+def test_validation_workload_ref_rejects_private_state():
+    with pytest.raises(ValueError, match="no parameters"):
+        Scenario.from_dict({"workload": {"kind": "hotspot_drift",
+                                         "_counts": {"5": 9999}}})
+
+
+def test_stateful_workload_replays_identically_across_runs():
+    sc = Scenario(total_ops=600, batch_size=10, seed=2,
+                  workload=HotspotDriftWorkload(n_hot=4, p_hot=0.8,
+                                                drift_every=100))
+    stream = lambda art: sorted((o.op_id, o.obj)  # noqa: E731
+                                for c in art.clients for o in c.ops)
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert stream(a) == stream(b)
+    assert a.result.makespan_s == b.result.makespan_s
+
+
+def test_validation_unknown_scenario_field():
+    with pytest.raises(ValueError, match="unknown Scenario fields"):
+        Scenario.from_dict({"protcol": "woc"})
+
+
+# ---------------------------------------------------------------------------
+# Registry capabilities
+# ---------------------------------------------------------------------------
+
+def test_registry_metadata_drives_client_targeting():
+    assert protocol_info("cabinet").leader_based
+    assert protocol_info("paxos").leader_based
+    assert not protocol_info("woc").leader_based
+    assert not protocol_info("epaxos").leader_based
+    # leader-based protocols pin the group leader; others round-robin
+    assert [client_target_fn("cabinet", 1, 5, offset=10)(k)
+            for k in range(3)] == [10, 10, 10]
+    assert [client_target_fn("woc", 1, 5, offset=10)(k)
+            for k in range(3)] == [11, 12, 13]
+
+
+def test_registry_compat_snapshots():
+    # legacy import surface mirrors the registry
+    assert set(PROTOCOLS) == {"woc", "cabinet", "paxos", "epaxos"}
+    assert LEADER_BASED == {"cabinet", "paxos"}
+    assert protocols_with(reads="linearizable") == \
+        ["cabinet", "paxos", "woc"]
+
+
+def test_protocol_plugin_registration():
+    from repro.core.woc import WocReplica
+
+    class TunedWoc(WocReplica):
+        pass
+
+    register_protocol(ProtocolInfo("woc_tuned", TunedWoc,
+                                   leader_based=False))
+    try:
+        r = run_scenario(Scenario(protocol="woc_tuned", total_ops=200,
+                                  batch_size=10)).result
+        assert r.committed_ops == 200
+        # an unmodified subclass is the same protocol, bit for bit
+        base = run_scenario(Scenario(protocol="woc", total_ops=200,
+                                     batch_size=10)).result
+        assert r.makespan_s == base.makespan_s
+    finally:
+        from repro.scenario.registry import _REGISTRY
+        _REGISTRY.pop("woc_tuned", None)
+
+
+def test_workload_plugin_registration():
+    @dataclasses.dataclass(frozen=True)
+    class SingleObject:
+        reads_fraction: float = 0.0
+
+        def sample_object(self, client, rng):
+            return 7
+
+        def sample_kind(self, client, rng):
+            return "w"
+
+    register_workload("single_object", SingleObject)
+    try:
+        sc = Scenario(workload=SingleObject(), total_ops=100, batch_size=10)
+        assert Scenario.from_dict(sc.to_dict()) == sc
+        art = run_scenario(sc)
+        assert art.result.committed_ops == 100
+        assert {op.obj for c in art.clients for op in c.ops} == {7}
+    finally:
+        from repro.scenario.workloads import _KIND_OF, _REGISTRY
+        _REGISTRY.pop("single_object", None)
+        _KIND_OF.pop(SingleObject, None)
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+def test_zipf_skew_concentrates_mass():
+    import numpy as np
+    rng = np.random.default_rng(0)
+    flat = ZipfWorkload(n_objects=128, theta=0.0)
+    skew = ZipfWorkload(n_objects=128, theta=2.5)
+    flat_draws = {flat.sample_object(0, rng) for _ in range(500)}
+    skew_draws = [skew.sample_object(0, rng) for _ in range(500)]
+    assert len(flat_draws) > len(set(skew_draws))
+    head = (1 << 61) | 0
+    assert skew_draws.count(head) / len(skew_draws) > 0.5
+    assert skew.independence_index() < 0.6 < flat.independence_index()
+
+
+def test_hotspot_drift_changes_working_set():
+    import numpy as np
+    wl = HotspotDriftWorkload(n_hot=4, p_hot=1.0, drift_every=100, seed=3)
+    rng = np.random.default_rng(0)
+    first = {wl.sample_object(0, rng) for _ in range(100)}
+    second = {wl.sample_object(0, rng) for _ in range(100)}
+    assert len(first) <= 4 and len(second) <= 4
+    assert first != second          # epoch advanced, set re-drawn
+    # deterministic: a fresh instance replays the identical stream
+    wl3 = HotspotDriftWorkload(n_hot=4, p_hot=1.0, drift_every=100, seed=3)
+    wl4 = HotspotDriftWorkload(n_hot=4, p_hot=1.0, drift_every=100, seed=3)
+    rng3, rng4 = np.random.default_rng(1), np.random.default_rng(1)
+    assert [wl3.sample_object(5, rng3) for _ in range(300)] == \
+        [wl4.sample_object(5, rng4) for _ in range(300)]
+
+
+def test_bursty_stretches_makespan_same_stream():
+    steady = run_scenario(Scenario(total_ops=600, batch_size=10, seed=4))
+    bursty = run_scenario(Scenario(
+        total_ops=600, batch_size=10, seed=4,
+        workload=BurstyWorkload(burst_batches=5, gap_s=0.01)))
+    s_ops = sorted((o.op_id, o.obj, o.kind)
+                   for c in steady.clients for o in c.ops)
+    b_ops = sorted((o.op_id, o.obj, o.kind)
+                   for c in bursty.clients for o in c.ops)
+    assert s_ops == b_ops
+    assert bursty.result.committed_ops == steady.result.committed_ops
+    assert bursty.result.makespan_s > steady.result.makespan_s
+
+
+def test_check_linearizable_flag():
+    sc = Scenario(total_ops=400, batch_size=10, n_clients=3,
+                  workload=Workload(p_independent=0.5, p_hot=0.3,
+                                    p_common=0.2, n_hot_objects=2,
+                                    reads_fraction=0.3),
+                  verify=Verification(capture_history=True,
+                                      check_linearizable=True))
+    art = run_scenario(sc)           # raises on violation
+    assert art.result.history
+
+
+def test_sharded_scenarios_accept_registry_workloads():
+    # the locality layer routes any registered generator: shared zipf
+    # draws stay hash-placed across groups; a bursty wrapper shapes the
+    # shard clients' arrivals too
+    z = run_scenario(Scenario(total_ops=600, batch_size=10, seed=1,
+                              workload=ZipfWorkload(n_objects=256,
+                                                    theta=0.5),
+                              sharding=Sharding(n_groups=2))).result
+    assert z.committed_ops == 600
+    b = run_scenario(Scenario(total_ops=600, batch_size=10, seed=1,
+                              workload=BurstyWorkload(burst_batches=5,
+                                                      gap_s=0.01),
+                              sharding=Sharding(n_groups=2))).result
+    s = run_scenario(Scenario(total_ops=600, batch_size=10, seed=1,
+                              sharding=Sharding(n_groups=2))).result
+    assert b.committed_ops == s.committed_ops == 600
+    assert b.makespan_s > s.makespan_s
+
+
+def test_sharded_scenario_with_faults_serial():
+    sc = Scenario(protocol="woc", n_replicas=3, total_ops=600,
+                  batch_size=10, seed=1,
+                  faults=(Crash(0.05, "low_weight"),
+                          Recover(0.2, "low_weight")),
+                  sharding=Sharding(n_groups=2, workers=1))
+    r = run_scenario(sc).result
+    assert r.committed_ops == 600
+    assert r.history                 # faults imply capture
