@@ -19,11 +19,14 @@ verified linearizable before any number is reported — an unverified
 recovery curve is worthless.
 """
 
+import pathlib
+
 from benchmarks.common import Claims, write_csv, write_json
 
 from repro.core.simulator import Workload
-from repro.faults import Crash, Degrade, Recover
-from repro.scenario import Scenario, run_scenario
+from repro.faults import Crash, Degrade, Recover, resolve_node
+from repro.obs import analyze_events, write_trace
+from repro.scenario import Observability, Scenario, run_scenario
 from repro.verify import (check_history_linearizable, effective_downtime,
                           recovery_report)
 
@@ -32,10 +35,11 @@ WORKLOAD = Workload(p_independent=0.8, p_common=0.1, p_hot=0.1,
 
 
 def _scenario(proto: str, name: str, faults, fault_at: float,
-              total_ops: int, claims: Claims) -> dict:
+              total_ops: int, claims: Claims, obs=None) -> tuple:
     art = run_scenario(
         Scenario(protocol=proto, total_ops=total_ops, batch_size=10,
-                 n_clients=4, workload=WORKLOAD, faults=faults, seed=5))
+                 n_clients=4, workload=WORKLOAD, faults=faults, seed=5,
+                 obs=obs))
     r = art.result
     ok, why = check_history_linearizable(r.history)
     claims.check(f"{proto}/{name}: all ops commit, history linearizable",
@@ -43,7 +47,7 @@ def _scenario(proto: str, name: str, faults, fault_at: float,
                  f"committed={r.committed_ops}/{total_ops} "
                  f"{'ok' if ok else why}")
     rep = recovery_report(r.history, fault_at)
-    return {"protocol": proto, "scenario": name,
+    return r, {"protocol": proto, "scenario": name,
             "ops": r.committed_ops, "makespan_s": round(r.makespan_s, 4),
             "tx_s": round(r.throughput_tx_s, 1),
             "baseline_tx_s": round(rep.baseline_tx_s, 1),
@@ -55,7 +59,8 @@ def _scenario(proto: str, name: str, faults, fault_at: float,
             "fast_frac": round(r.fast_path_frac, 4)}
 
 
-def run_bench(out_dir, quick: bool = False) -> list[str]:
+def run_bench(out_dir, quick: bool = False,
+              trace: bool = False) -> list[str]:
     claims = Claims()
     total = 10_000 if quick else 30_000
     at = 0.05 if quick else 0.15
@@ -71,9 +76,19 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
 
     rows = []
     by = {}
+    deg_trace = None
     for proto in ("woc", "cabinet"):
         for name, faults in {**crash_of, **degrade}.items():
-            row = _scenario(proto, name, faults, at, total, claims)
+            # the recovery-timeline trace: op-level spans for the WOC
+            # degrade run feed the critical-path attribution claim below
+            # (recording is host-side only, so the numbers are identical
+            # with tracing on)
+            obs = (Observability(trace=True)
+                   if (proto, name) == ("woc", "degrade_top") else None)
+            r, row = _scenario(proto, name, faults, at, total, claims,
+                               obs=obs)
+            if obs is not None:
+                deg_trace = r.trace
             rows.append(row)
             by[(proto, name)] = row
 
@@ -123,6 +138,37 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
         f"woc dip={woc_deg['dip_frac']:.2f} "
         f"cabinet dip={cab_deg['dip_frac']:.2f}")
 
+    # -- critical-path attribution of the degradation window -----------------
+    # split the recovery timeline at the fault boundaries and ask the
+    # analyzer WHERE the extra latency went: inside [at, heal) the
+    # decomposition should charge the throughput sag to quorum-straggler
+    # waits on the degraded (top-weight) replica, not to queueing or the
+    # link floor
+    deg_node = resolve_node("top_weight", 5)
+    inside = analyze_events(deg_trace, window=(at, heal))
+    outside = analyze_events(deg_trace, window=(0.0, at))
+    in_per_op = (inside.straggler_by_node.get(deg_node, 0.0)
+                 / max(1, inside.analyzed))
+    out_per_op = (outside.straggler_by_node.get(deg_node, 0.0)
+                  / max(1, outside.analyzed))
+    claims.check(
+        "WOC degrade-top: critical-path analyzer attributes the in-window "
+        "latency sag to quorum-straggler time on the degraded top-weight "
+        "node (top straggler = degraded node; its per-op straggler charge "
+        ">= 2x the pre-fault window)",
+        inside.top_straggler() == deg_node
+        and in_per_op >= 2 * out_per_op and in_per_op > 0.0,
+        f"top_straggler={inside.top_straggler()} (degraded={deg_node}) "
+        f"straggler/op in-window={in_per_op*1e3:.4f}ms "
+        f"pre-fault={out_per_op*1e3:.4f}ms")
+    critical_path = {"degraded_node": deg_node, "window_s": [at, heal],
+                     "inside": inside.to_dict(),
+                     "outside": outside.to_dict()}
+    if trace:
+        out = pathlib.Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        write_trace(str(out / "TRACE_degrade_top_woc.json"), deg_trace)
+
     write_csv(out_dir, "fault_recovery", rows)
     write_json(out_dir, "BENCH_faults", {
         "bench": "fault_recovery",
@@ -133,6 +179,7 @@ def run_bench(out_dir, quick: bool = False) -> list[str]:
                       for p in ("woc", "cabinet")
                       for s in list(crash_of) + list(degrade)},
         "points": rows,
+        "critical_path": critical_path,
         "claims": claims.lines,
     })
     return claims.lines

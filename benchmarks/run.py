@@ -54,6 +54,11 @@ def main() -> int:
                     help="worker processes for parallel-simulation suites "
                          "(0 = auto: min(groups, cores)); suites that do "
                          "not take a jobs parameter ignore it")
+    ap.add_argument("--trace", action="store_true",
+                    help="export Perfetto-loadable TRACE_*.json span "
+                         "artifacts from trace-aware suites (see "
+                         "repro.obs); suites that do not take a trace "
+                         "parameter ignore it")
     args = ap.parse_args()
 
     all_lines = []
@@ -64,8 +69,11 @@ def main() -> int:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
         kwargs = {"quick": args.quick}
-        if "jobs" in inspect.signature(mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if "jobs" in params:
             kwargs["jobs"] = args.jobs
+        if "trace" in params:
+            kwargs["trace"] = args.trace
         lines = mod.run(args.out, **kwargs)
         for ln in lines:
             print("  " + ln, flush=True)

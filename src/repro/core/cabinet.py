@@ -35,6 +35,7 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
         rec = {"client": msg.src, "remaining": set()}
         self.pending[bid] = rec
         todo = []
+        tr = self.sim.tracer
         for op in ops:
             if op.op_id in self.rsm.applied_ops:       # client retry
                 if op.commit_time < 0:
@@ -43,10 +44,18 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
                     commit_log = self.sim.commit_log
                     if op.op_id not in commit_log:
                         commit_log[op.op_id] = (now, op.path)
+                        if tr is not None:
+                            tr.ev("commit", now, self.node_id,
+                                  op.op_id, op.path)
                 self.credit_op(msg.src, bid, op.op_id)
                 continue
             rec["remaining"].add(op.op_id)
             self.op2batch[op.op_id] = bid
+            if tr is not None and tr.sampled(op.op_id):
+                tr.ev("ingress", now, self.node_id, op.op_id, op.obj,
+                      op.submit_time, op.client)
+                tr.ev("route", now, self.node_id, op.op_id, op.obj,
+                      "slow", "single_leader")
             todo.append(op)
         if not rec["remaining"]:
             self.pending.pop(bid, None)
@@ -71,6 +80,9 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
             commit_log = self.sim.commit_log
             if op.op_id not in commit_log:
                 commit_log[op.op_id] = (now, path)
+                tr = self.sim.tracer
+                if tr is not None:
+                    tr.ev("commit", now, self.node_id, op.op_id, path)
         rec = self.pending.get(bid)
         if rec is None:
             return

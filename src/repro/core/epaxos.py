@@ -52,6 +52,7 @@ class EPaxosReplica(BaseReplica):
     def on_client_req(self, msg: Msg, now: float) -> None:
         ops: List[Op] = msg.payload["ops"]
         done = [op for op in ops if op.op_id in self.rsm.applied_ops]
+        tr = self.sim.tracer
         if done:                                     # client retry
             for op in done:
                 if op.commit_time < 0:
@@ -60,6 +61,9 @@ class EPaxosReplica(BaseReplica):
                     commit_log = self.sim.commit_log
                     if op.op_id not in commit_log:
                         commit_log[op.op_id] = (now, op.path)
+                        if tr is not None:
+                            tr.ev("commit", now, self.node_id,
+                                  op.op_id, op.path)
                 self.credit_op(msg.src, msg.payload["batch_id"], op.op_id)
             self.flush_credits()
             ops = [op for op in ops if op.op_id not in self.rsm.applied_ops]
@@ -72,6 +76,12 @@ class EPaxosReplica(BaseReplica):
                          client=msg.src, client_bid=msg.payload["batch_id"],
                          ops=ops, dep_any=np.zeros(len(ops), dtype=bool))
         self.batches[eb.batch_id] = eb
+        if tr is not None:
+            sampled = tr.sampled
+            for op in ops:
+                if sampled(op.op_id):
+                    tr.ev("ingress", now, self.node_id, op.op_id, op.obj,
+                          op.submit_time, op.client)
         # self pre-accept
         for i, op in enumerate(ops):
             if self.has_conflict(op.obj, op.op_id, now):
@@ -86,6 +96,10 @@ class EPaxosReplica(BaseReplica):
         eb = self.batches.get(msg.payload["eb"])
         if eb is None or eb.phase != "preaccept":
             return
+        tr = self.sim.tracer
+        if tr is not None:
+            tr.ev("epx_reply", now, self.node_id, eb.batch_id, "pre",
+                  msg.src)
         eb.replies += 1
         eb.dep_any |= msg.payload["deps"]
         if eb.replies >= self.majority:
@@ -107,6 +121,10 @@ class EPaxosReplica(BaseReplica):
         eb = self.batches.get(msg.payload["eb"])
         if eb is None or eb.phase != "accept":
             return
+        tr = self.sim.tracer
+        if tr is not None:
+            tr.ev("epx_reply", now, self.node_id, eb.batch_id, "acc",
+                  msg.src)
         eb.accept_acks += 1
         if eb.accept_acks >= self.majority:
             self._commit(eb.deferred, now)
@@ -119,6 +137,7 @@ class EPaxosReplica(BaseReplica):
         self.sim.busy(self.node_id,
                       c.c_apply * len(ops) * c.speed(self.node_id))
         commit_log = self.sim.commit_log
+        tr = self.sim.tracer
         for op in ops:
             self.rsm.apply(op)
             self.clear_inflight(op.obj, op.op_id)
@@ -127,6 +146,9 @@ class EPaxosReplica(BaseReplica):
                 op.path = "fast" if not op.path else op.path
                 if op.op_id not in commit_log:
                     commit_log[op.op_id] = (now, op.path)
+                    if tr is not None:
+                        tr.ev("commit", now, self.node_id,
+                              op.op_id, op.path)
         others = [r for r in range(self.sim.n) if r != self.node_id]
         self.broadcast(others, "epx_commit", {"ops": ops},
                        size_ops=len(ops))

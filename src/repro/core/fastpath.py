@@ -110,6 +110,13 @@ class FastPathMixin:
         fb.observe = [op for op in itertools.islice(ops, OBSERVE_CAP)
                       if type(om_stats.get(op.obj)) is not int]
         self.fast_batches[fb.batch_id] = fb
+        tr = self.sim.tracer
+        if tr is not None:
+            sampled = tr.sampled
+            for op in ops:
+                if sampled(op.op_id):
+                    tr.ev("fast_propose", now, self.node_id,
+                          fb.batch_id, op.op_id)
         self.broadcast(self._others, "fast_propose",
                        {"fb": fb.batch_id, "ops": ops}, size_ops=B)
         # timeout scales with batch size: large batches legitimately spend
@@ -125,6 +132,10 @@ class FastPathMixin:
             return
         src = msg.src
         fb.replied.add(src)
+        tr = self.sim.tracer
+        if tr is not None:       # batch-level: always recorded (no sampling)
+            tr.ev("fast_accept", now, self.node_id, fb.batch_id, src,
+                  1 if msg.payload.get("lead") else 0)
         bits: int = msg.payload["mask"]             # bit i = FAST_ACCEPT
         B = len(fb.ops)
         conflicted = None
@@ -178,6 +189,13 @@ class FastPathMixin:
             committed = [fb.ops[i] for i in np.flatnonzero(ready)]
             fb.resolved |= ready
         fb.n_resolved += len(committed)
+        tr = self.sim.tracer
+        if tr is not None:
+            sampled = tr.sampled
+            for op in committed:
+                if sampled(op.op_id):
+                    tr.ev("fast_commit", now, self.node_id,
+                          fb.batch_id, op.op_id)
         if fb.deps:
             deps = {op.op_id: fb.deps.get(op.op_id, []) for op in committed}
         else:
@@ -191,7 +209,8 @@ class FastPathMixin:
         self.flush_credits()
         self._fast_gc(fb)
 
-    def _divert(self, fb: FastBatch, which: np.ndarray, now: float) -> None:
+    def _divert(self, fb: FastBatch, which: np.ndarray, now: float,
+                reason: str = "conflict") -> None:
         which &= ~fb.resolved
         n = int(which.sum())
         if not n:
@@ -199,6 +218,13 @@ class FastPathMixin:
         fb.resolved |= which
         fb.n_resolved += n
         ops = [fb.ops[i] for i in np.flatnonzero(which)]
+        tr = self.sim.tracer
+        if tr is not None:
+            sampled = tr.sampled
+            for op in ops:
+                if sampled(op.op_id):
+                    tr.ev("divert", now, self.node_id, fb.batch_id,
+                          op.op_id, reason)
         self.forward_slow(ops, now)
         self._fast_gc(fb)
 
@@ -214,7 +240,7 @@ class FastPathMixin:
             return
         pending = ~fb.resolved
         if pending.any():                             # Alg. 1 line 16
-            self._divert(fb, pending, now)
+            self._divert(fb, pending, now, "timeout")
 
     # -- replica side -----------------------------------------------------------
 

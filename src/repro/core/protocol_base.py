@@ -536,6 +536,10 @@ class BaseReplica(Node):
             # (same-object commits without a dep edge share a link, so
             # arrival order is consistent across replicas)
             self._obj_buffer.setdefault(op.obj, []).append((op, deps, path))
+            tr = self.sim.tracer
+            if tr is not None and tr.sampled(op.op_id):
+                tr.ev("dep_stall", now, self.node_id, op.op_id, op.obj,
+                      len(deps))
             self.set_timer(self.gc_timeout, "dep_timeout",
                            {"obj": op.obj, "op_id": op.op_id})
             return
@@ -675,6 +679,15 @@ class BaseReplica(Node):
             for d in self.sim.replicas():
                 if d != self.node_id:
                     self.send(d, "heartbeat", {})
+            tr = self.sim.tracer
+            if tr is not None:
+                # per-peer latency-EMA samples on the heartbeat cadence:
+                # the weight-evolution timeline of §3.1, for free
+                node_ema = self.node_ema
+                for d in range(self.sim.n):
+                    if d != self.node_id:
+                        tr.ev("ema", now, self.node_id, d,
+                              float(node_ema[d]))
             self._hb_timer = self.set_timer(self.HB_INTERVAL, "hb")
             self._check_isolation(now)
             return

@@ -328,8 +328,16 @@ class EventEngine:
         self.clients_done = 0          # bumped by Client on completion
         # op_id -> (commit_time, path): earliest protocol stamp, written
         # next to every ``op.commit_time = now`` site (metrics substrate
-        # for partitioned runs; mirrors Op stamping in one-engine runs)
+        # for partitioned runs; mirrors Op stamping in one-engine runs).
+        # Cleared by the runners once metrics are assembled (unbounded
+        # growth fix); the residual count is surfaced as a metric.
         self.commit_log: Dict[int, tuple] = {}
+        # observability (repro.obs): host-side span recorder, attached by
+        # the runners when the Observability spec enables tracing. Every
+        # instrumentation site is guarded by an ``is not None`` check and
+        # the recorder never posts messages or charges CPU time, so
+        # simulated timing is bit-identical with tracing on or off.
+        self.tracer = None
         # partitioned mode (None/inactive for plain Simulation): foreign
         # lookup table, boundary outbox, and the current window's post
         # event-times (for exact-stop message accounting — see parallel.py)
@@ -692,14 +700,31 @@ class EventEngine:
                         nodes[node_id].on_timer(name, payload, t)
                 elif kind == _CRASH:
                     crashed.add(item)
+                    tr = self.tracer
+                    if tr is not None:
+                        tr.ev("fault", t, item, "crash", 0.0)
                 elif kind == _RECOVER:
                     crashed.discard(item)
                     busy[item] = t
+                    tr = self.tracer
+                    if tr is not None:
+                        tr.ev("fault", t, item, "recover", 0.0)
                     hook = getattr(self.nodes.get(item), "on_recover", None)
                     if hook is not None:
                         hook(t)
                 else:  # _FAULT
                     self._apply_fault(*item)
+                    tr = self.tracer
+                    if tr is not None:
+                        action, payload = item
+                        if action == "degrade":
+                            tr.ev("fault", t, payload[0], "degrade",
+                                  float(payload[1]
+                                        if payload[1] is not None else 1.0))
+                        else:   # cut / restore: annotate affected link count
+                            tr.ev("fault", t, -1, action,
+                                  float(len(payload)
+                                        if payload is not None else -1))
         finally:
             if gc_was_on:
                 gc.enable()
@@ -968,10 +993,21 @@ class RunResult:
     events_per_sec: float = 0.0
     wall_s: float = 0.0
     heap_peak: int = 0
+    # idle-path arrive+proc pairs run inline — deterministic for a single
+    # engine (part of the same-seed contract), but heap-composition
+    # dependent, so the sharded serial<->parallel contract treats its
+    # aggregate as telemetry (see repro.shard TELEMETRY_FIELDS)
+    collapsed: int = 0
+    # commit_log entries left after matching client ops (ops that never
+    # reached a client ack path); the log itself is cleared at run end
+    commit_log_residual: int = 0
     # client invoke/response history (repro.verify.HistoryEntry records),
     # captured when RunConfig.capture_history is set or a fault schedule is
     # active; deterministic given seed + schedule, unlike the telemetry
     history: list = dataclasses.field(default_factory=list, repr=False)
+    # canonical span trace (repro.obs), populated when the Observability
+    # spec enables tracing; deterministic given seed + schedule
+    trace: list = dataclasses.field(default_factory=list, repr=False)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_replicas},{self.n_clients},"
@@ -1000,4 +1036,5 @@ def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
         events_per_sec=(sim.stats_events / sim.wall_s
                         if sim.wall_s > 0 else 0.0),
         wall_s=sim.wall_s,
-        heap_peak=sim.heap_peak)
+        heap_peak=sim.heap_peak,
+        collapsed=sim.stats_collapsed)

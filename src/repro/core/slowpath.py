@@ -89,6 +89,8 @@ class SlowPathMixin:
         credit_buf = self._credit_buf
         commit_log = self.sim.commit_log
         stamp = (now, path)
+        tr = self.sim.tracer
+        node_id = self.node_id
         for op in ops:
             op_id = op.op_id
             if forwarded:
@@ -103,6 +105,8 @@ class SlowPathMixin:
                 op.path = path
                 if op_id not in commit_log:
                     commit_log[op_id] = stamp
+                    if tr is not None:
+                        tr.ev("commit", now, node_id, op_id, path)
             rec = pending.get(bid)
             if rec is None:
                 continue
@@ -124,6 +128,13 @@ class SlowPathMixin:
         leader = self.current_leader(now)
         for op in ops:
             self._forwarded[op.op_id] = op
+        tr = self.sim.tracer
+        if tr is not None:
+            sampled = tr.sampled
+            for op in ops:
+                if sampled(op.op_id):
+                    tr.ev("slow_forward", now, self.node_id,
+                          op.op_id, leader)
         if leader == self.node_id:
             self._enqueue_slow(ops, now)
         else:
@@ -153,6 +164,12 @@ class SlowPathMixin:
         ops = [op for op in ops if op.op_id not in self.rsm.applied_ops
                and op.op_id not in self._slow_pending]
         if ops:
+            tr = self.sim.tracer
+            if tr is not None:
+                sampled = tr.sampled
+                for op in ops:
+                    if sampled(op.op_id):
+                        tr.ev("slow_enqueue", now, self.node_id, op.op_id)
             for op in ops:
                 self._slow_pending_add(op)
             self.slow_queue.append(ops)
@@ -198,6 +215,13 @@ class SlowPathMixin:
                             acked={self.node_id}, propose_time=now,
                             deps=deps)
         self.slow_inst = inst
+        tr = self.sim.tracer
+        if tr is not None:
+            sampled = tr.sampled
+            for op in ops:
+                if sampled(op.op_id):
+                    tr.ev("slow_propose", now, self.node_id,
+                          inst.inst_id, op.op_id)
         self.broadcast(self._others, "slow_propose",
                        {"inst": inst.inst_id, "ops": ops}, size_ops=len(ops))
         inst.timer = self.set_timer(self.sim.costs.timeout,
@@ -218,6 +242,10 @@ class SlowPathMixin:
             return
         inst.acked.add(msg.src)
         inst.psum += float(self.node_weights()[msg.src])
+        tr = self.sim.tracer
+        if tr is not None:   # instance-level: always recorded (no sampling)
+            tr.ev("slow_accept", now, self.node_id, inst.inst_id,
+                  msg.src, inst.psum)
         # updatePriorities(responders): latency EMA feeds the next ranking
         self.observe_node(msg.src, now - inst.propose_time)
         self._slow_check_commit(inst, now)
@@ -228,6 +256,13 @@ class SlowPathMixin:
         inst.committed = True
         if inst.timer is not None:
             inst.timer.cancel()
+        tr = self.sim.tracer
+        if tr is not None:
+            sampled = tr.sampled
+            for op in inst.ops:
+                if sampled(op.op_id):
+                    tr.ev("slow_commit", now, self.node_id,
+                          inst.inst_id, op.op_id)
         self.broadcast(self._others, "slow_commit",
                        {"ops": inst.ops, "deps": inst.deps},
                        size_ops=len(inst.ops))

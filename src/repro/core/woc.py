@@ -45,6 +45,7 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
         om_route = self.om.route
         slow_count = self._slow_obj_count
         node_id = self.node_id
+        tr = self.sim.tracer
         for op in ops:
             op_id = op.op_id
             if op_id in applied_ops:                   # client retry of a
@@ -54,20 +55,42 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
                     commit_log = self.sim.commit_log
                     if op_id not in commit_log:
                         commit_log[op_id] = (now, op.path)
+                        if tr is not None:
+                            tr.ev("commit", now, node_id, op_id, op.path)
                 self.credit_op(msg.src, bid, op_id)
                 continue
             remaining.add(op_id)
             op2batch[op_id] = bid
+            # routing evidence is consumed by om_route (in-flight map,
+            # post-migration window) — capture it before the call so the
+            # trace can explain the decision
+            samp = tr is not None and tr.sampled(op_id)
+            if samp:
+                tr.ev("ingress", now, node_id, op_id, op.obj,
+                      op.submit_time, op.client)
+                pre_conflict = bool(self.om.in_flight.get(op.obj))
+                pre_fresh = op.obj in self.om._fresh
             route = om_route(op.obj, op_id, op.client, node_id, now)
             if route is Route.FAST:
                 if slow_count and slow_count.get(op.obj):
                     # slow op queued here (we are leader)
+                    if samp:
+                        tr.ev("route", now, node_id, op_id, op.obj,
+                              "slow", "slow_queued")
                     slow_ops.append(op)
                     continue
+                if samp:
+                    tr.ev("route", now, node_id, op_id, op.obj,
+                          "fast", "independent")
                 # coordinator's own in-flight registration (self-vote side)
                 self.register_inflight(op.obj, op_id, now)
                 fast_ops.append(op)
             else:
+                if samp:
+                    tr.ev("route", now, node_id, op_id, op.obj, "slow",
+                          "post_migration" if pre_fresh
+                          else "conflict_inflight" if pre_conflict
+                          else "hot_or_common")
                 slow_ops.append(op)
         if not remaining:
             self.pending.pop(bid, None)
@@ -112,6 +135,9 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
             commit_log = self.sim.commit_log
             if op_id not in commit_log:
                 commit_log[op_id] = (now, path)
+                tr = self.sim.tracer
+                if tr is not None:
+                    tr.ev("commit", now, self.node_id, op_id, path)
         rec = self.pending.get(bid)
         if rec is None:
             return

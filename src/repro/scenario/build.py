@@ -42,7 +42,7 @@ def lower_sharded(sc: Scenario) -> ShardedRunConfig:
         steal_cooldown=sh.steal_cooldown, workload=sc.workload,
         costs=sc.costs, seed=sc.seed, sim_time_cap=sc.sim_time_cap,
         workers=sh.workers, faults=sc.faults,
-        capture_history=sc.verify.capture_history)
+        capture_history=sc.verify.capture_history, obs=sc.obs)
 
 
 def run_scenario(sc: Scenario) -> Union[RunArtifacts,
@@ -60,11 +60,18 @@ def run_scenario(sc: Scenario) -> Union[RunArtifacts,
         art = _run_flat(sc)
     if sc.verify.check_linearizable:
         _check(art.result)
+    if sc.obs is not None and sc.obs.export:
+        from repro.obs.export import write_trace
+        write_trace(sc.obs.export, art.result.trace,
+                    fmt=sc.obs.export_format)
     return art
 
 
 def _run_flat(sc: Scenario) -> RunArtifacts:
     sim = Simulation(sc.n_replicas, sc.costs, seed=sc.seed)
+    if sc.obs is not None and sc.obs.trace:
+        from repro.obs.spans import Tracer
+        sim.tracer = Tracer(sample_every=sc.obs.sample_every)
     cls = protocol_class(sc.protocol)
     t = max(1, min(sc.t_fail, (sc.n_replicas - 1) // 2))
     replicas = [cls(i, sim, t_fail=t, group_cap=max(sc.batch_size, 1))
@@ -98,6 +105,14 @@ def _run_flat(sc: Scenario) -> RunArtifacts:
 
     result = collect_metrics(sc.protocol, sim, clients, sc.batch_size,
                              t_start=0.0)
+    # commit_log growth fix: every stamped op holds one entry for the
+    # whole run — surface the orphan count (stamps that never reached a
+    # client ack) and release the log
+    result.commit_log_residual = len(sim.commit_log) - result.committed_ops
+    sim.commit_log.clear()
+    if sim.tracer is not None:
+        from repro.obs.spans import canonical_events
+        result.trace = canonical_events(sim.tracer.events)
     if sc.verify.capture_history or sc.faults:
         from repro.verify import capture_history
         result.history = capture_history(clients)

@@ -61,6 +61,23 @@ class Sharding:
 
 
 @dataclasses.dataclass(frozen=True)
+class Observability:
+    """Deterministic op-level tracing (repro.obs). ``trace`` enables the
+    host-side span recorder — simulated timing is bit-identical with it
+    on or off, and same-seed runs export byte-identical traces.
+    ``sample_every=k`` keeps every k-th op's span (deterministic hash of
+    the op id; authoritative commit stamps are always recorded, so
+    path-mix metrics stay exact under sampling). ``export`` names a file
+    to write the canonical trace to after the run, in ``export_format``:
+    "chrome" (Perfetto-loadable ``trace_event`` JSON) or "jsonl"."""
+
+    trace: bool = False
+    sample_every: int = 1
+    export: Optional[str] = None
+    export_format: str = "chrome"
+
+
+@dataclasses.dataclass(frozen=True)
 class Verification:
     """Post-run checking. ``capture_history`` records the client
     invoke/response history on the result (implied by any fault
@@ -89,6 +106,7 @@ class Scenario:
     faults: Tuple = ()
     sharding: Optional[Sharding] = None
     verify: Verification = dataclasses.field(default_factory=Verification)
+    obs: Optional[Observability] = None
 
     # -- validation (fail fast at construction) -----------------------------
 
@@ -148,6 +166,21 @@ class Scenario:
                     "(workers=1): the parallel engine does not capture "
                     "client histories; use workers=1 (or 0, which "
                     "resolves to serial when capture is requested)")
+        ob = self.obs
+        if ob is not None:
+            if not isinstance(ob, Observability):
+                raise ValueError(f"obs must be an Observability spec, "
+                                 f"got {ob!r}")
+            if not isinstance(ob.sample_every, int) or ob.sample_every < 1:
+                raise ValueError(f"obs.sample_every must be an int >= 1, "
+                                 f"got {ob.sample_every!r}")
+            from repro.obs.export import EXPORT_FORMATS
+            if ob.export_format not in EXPORT_FORMATS:
+                raise ValueError(
+                    f"unknown obs.export_format {ob.export_format!r} "
+                    f"(expected one of {EXPORT_FORMATS})")
+            if ob.export and not ob.trace:
+                raise ValueError("obs.export requires obs.trace=True")
         if (self.verify.check_linearizable
                 and not (self.verify.capture_history or self.faults)):
             raise ValueError(
@@ -198,6 +231,8 @@ class Scenario:
             "sharding": (dataclasses.asdict(self.sharding)
                          if self.sharding is not None else None),
             "verify": dataclasses.asdict(self.verify),
+            "obs": (dataclasses.asdict(self.obs)
+                    if self.obs is not None else None),
         }
         return d
 
@@ -213,6 +248,7 @@ class Scenario:
         costs = d.pop("costs", None)
         sharding = d.pop("sharding", None)
         verify = d.pop("verify", None)
+        obs = d.pop("obs", None)
         known = {f.name for f in dataclasses.fields(cls)}
         bad = set(d) - known
         if bad:
@@ -229,6 +265,8 @@ class Scenario:
             verify=(verify if isinstance(verify, Verification)
                     else Verification(**verify) if verify is not None
                     else Verification()),
+            obs=(obs if isinstance(obs, (Observability, type(None)))
+                 else Observability(**obs)),
             **d)
 
     def to_json(self, **kw) -> str:
@@ -274,7 +312,8 @@ class Scenario:
                 p_working=cfg.p_working, drift_every=cfg.drift_every,
                 steal_threshold=cfg.steal_threshold,
                 steal_cooldown=cfg.steal_cooldown, workers=cfg.workers),
-            verify=Verification(capture_history=cfg.capture_history))
+            verify=Verification(capture_history=cfg.capture_history),
+            obs=cfg.obs)
 
 
 # ---------------------------------------------------------------------------

@@ -172,6 +172,10 @@ class _ShardGateMixin:
             g.redirects += len(redirects)
             if g.journal is not None:
                 g.journal.append((now, "redirects", len(redirects)))
+            tr = self.sim.tracer
+            if tr is not None:
+                for _, obj, grp, _ in redirects:
+                    tr.ev("redirect", now, self.node_id, obj, grp)
             self.send(msg.src, "shard_redirect",
                       {"batch_id": bid, "redirects": redirects})
         if mine:
@@ -192,6 +196,9 @@ class _ShardGateMixin:
         g.steals_started += 1
         if g.journal is not None:
             g.journal.append((now, "steals_started", 1))
+        tr = self.sim.tracer
+        if tr is not None:
+            tr.ev("steal_hint", now, self.node_id, obj)
         self._shard_send(grp * g.size, "shard_steal_req",
                          {"obj": obj, "group": g.group, "epoch_seen": ep,
                           "from": self._gid()})
@@ -241,6 +248,9 @@ class _ShardGateMixin:
         if p["epoch"] <= self._install_epochs.get(obj, 0):
             return
         self._install_epochs[obj] = p["epoch"]
+        tr = self.sim.tracer
+        if tr is not None:
+            tr.ev("steal_install", now, self.node_id, obj, p["epoch"])
         c = self.sim.costs
         self.sim.busy(self.node_id, c.c_parse * max(1, len(p["op_ids"]))
                       * c.speed(self.node_id))
@@ -285,6 +295,9 @@ class _ShardGateMixin:
                              {"obj": obj, "group": grp, "epoch": ep})
             return
         g.map.fence(obj)
+        tr = self.sim.tracer
+        if tr is not None:
+            tr.ev("steal_fence", now, self.node_id, obj)
         g.pending_grant[obj] = {"to": p["from"], "group": p["group"]}
         self._shard_drain_check(obj, now)
 
@@ -319,6 +332,9 @@ class _ShardGateMixin:
         if g.journal is not None:
             g.journal.append((now, "migrations_out", 1))
         g.migration_log.append((obj, g.group, rec["group"], epoch))
+        tr = self.sim.tracer
+        if tr is not None:
+            tr.ev("steal_grant", now, self.node_id, obj, epoch)
         om = getattr(self, "om", None)
         if om is not None:
             om.note_ownership(obj, epoch)

@@ -23,6 +23,7 @@ the receiver's local namespace.
 from __future__ import annotations
 
 from repro.core.simulator import Msg, Node, Simulation
+from repro.obs.spans import MappedTracer
 
 
 class GroupView:
@@ -36,6 +37,13 @@ class GroupView:
         self.costs = root.costs
         self.seed = root.seed
         self.commit_log = root.commit_log   # shared engine-wide stamp log
+        # protocol code under a view speaks local replica ids — wrap the
+        # root tracer (when tracing is on) so recorded events carry global
+        # ids, same namespace as the flat engine's trace. Captured at
+        # construction like commit_log: attach the tracer to the root
+        # engine BEFORE build_group.
+        rt = getattr(root, "tracer", None)
+        self.tracer = None if rt is None else MappedTracer(rt, self.to_global)
 
     # -- Simulation-compatible surface (what protocol code touches) ---------
 

@@ -83,6 +83,13 @@ class _Engine:
         self.group = g
         self.sim = EventEngine(G * npg, cfg.costs, seed=cfg.seed,
                                group_size=npg, client_home=home)
+        obs = cfg.obs
+        if obs is not None and getattr(obs, "trace", False):
+            # before build_group: the GroupView captures the tracer at
+            # construction (same contract as the serial runner)
+            from repro.obs.spans import Tracer
+            self.sim.tracer = Tracer(
+                sample_every=getattr(obs, "sample_every", 1))
         self.sim.configure_partition(
             lambda i: (i // npg == g) if i < G * npg else home[i] == g,
             n_nodes)
@@ -127,6 +134,11 @@ class _Engine:
             "events": sim.stats_events,
             "wall_s": sim.wall_s,
             "heap_peak": sim.heap_peak,
+            "collapsed": sim.stats_collapsed,
+            # truncate to the serial stop point: keep t <= T* (the
+            # complement of posts_after's strictly-after convention)
+            "trace": (None if sim.tracer is None else
+                      [e for e in sim.tracer.events if e[0] <= tstar]),
         }
 
 
@@ -289,6 +301,14 @@ def run_sharded_parallel(cfg: ShardedRunConfig,
                 merged[op_id] = rec
     client_rows = [row for e in engines for row in e["clients"]]
     gate_rows = [e["gate"] for e in engines]
+    trace = None
+    if any(e["trace"] is not None for e in engines):
+        # canonicalize the merged log: total (t, kind, node) order plus
+        # earliest-commit dedup (an op can stamp in two engines — e.g. a
+        # post-migration replay — where the serial shared log keeps one)
+        from repro.obs.spans import canonical_events
+        trace = canonical_events(
+            [ev for e in engines for ev in (e["trace"] or ())])
     messages = sum(e["messages"] for e in engines)
     events = sum(e["events"] for e in engines)
     wall_s = max((e["wall_s"] for e in engines), default=0.0)
@@ -305,6 +325,8 @@ def run_sharded_parallel(cfg: ShardedRunConfig,
             group=e["group"], events=e["events"], wall_s=e["wall_s"],
             events_per_sec=(e["events"] / e["wall_s"]
                             if e["wall_s"] > 0 else 0.0),
-            messages=e["messages"], heap_peak=e["heap_peak"])
-            for e in engines])
+            messages=e["messages"], heap_peak=e["heap_peak"],
+            collapsed=e["collapsed"])
+            for e in engines],
+        collapsed=sum(e["collapsed"] for e in engines), trace=trace)
     return ShardedRunArtifacts(result, None, [], [], [])

@@ -74,6 +74,11 @@ class ShardedRunConfig:
     # to serial. Symbolic node selectors resolve inside group 0's block.
     faults: Sequence = ()
     capture_history: bool = False
+    # Observability spec (repro.scenario.spec.Observability) or None;
+    # duck-typed here (.trace/.sample_every) to keep the carrier free of
+    # a scenario import. Tracing works in both serial and parallel modes
+    # (workers merge their per-engine traces through canonical_events).
+    obs: object = None
 
 
 @dataclasses.dataclass
@@ -97,6 +102,7 @@ class EngineStats:
     events_per_sec: float
     messages: int
     heap_peak: int
+    collapsed: int = 0                 # idle-path arrive+proc pairs inlined
 
 
 @dataclasses.dataclass
@@ -132,11 +138,25 @@ class ShardedRunResult:
     idle_wait_frac: float = 0.0        # parallel: worker time blocked at
                                        # window barriers / total worker time
     per_engine: List[EngineStats] = dataclasses.field(default_factory=list)
+    # aggregate idle-path collapse count: deterministic per engine, but
+    # heap-composition dependent, so serial and parallel runs legitimately
+    # differ -> telemetry
+    collapsed: int = 0
+    # commit_log entries left after matching client ops (stamps that never
+    # reached a client ack path); the logs themselves are released at run
+    # end. Identical serial vs parallel (the merged log is), so NOT
+    # telemetry.
+    commit_log_residual: int = 0
     # client invoke/response history (repro.verify), captured on serial
     # runs when capture_history/faults is set; deterministic, so NOT a
     # telemetry field (parallel runs never capture — see faults note on
     # ShardedRunConfig — so the serial<->parallel contract is unaffected)
     history: list = dataclasses.field(default_factory=list, repr=False)
+    # canonical span trace (repro.obs) when cfg.obs enables tracing. The
+    # span *set* is pinned identical serial vs parallel by tests/test_obs,
+    # but per-engine commit-dedup choices can differ in timestamps on
+    # duplicate-stamped ops, so the field itself is telemetry
+    trace: list = dataclasses.field(default_factory=list, repr=False)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_groups},{self.group_size},"
@@ -151,7 +171,8 @@ class ShardedRunResult:
 # worker counts) legitimately differ here — everything else is pinned
 # bit-identical between serial and parallel runs
 TELEMETRY_FIELDS = {"events", "events_per_sec", "wall_s", "heap_peak",
-                    "workers", "barriers", "idle_wait_frac", "per_engine"}
+                    "workers", "barriers", "idle_wait_frac", "per_engine",
+                    "collapsed", "trace"}
 
 
 def non_telemetry_metrics(result: "ShardedRunResult") -> dict:
@@ -314,6 +335,12 @@ def run_sharded_config(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
     n_clients = G * cfg.n_clients_per_group
     sim = Simulation(G * npg, cfg.costs, seed=cfg.seed, group_size=npg,
                      client_home=client_home_map(cfg))
+    obs = cfg.obs
+    if obs is not None and getattr(obs, "trace", False):
+        # before build_group: each GroupView captures the tracer (like
+        # commit_log) at construction
+        from repro.obs.spans import Tracer
+        sim.tracer = Tracer(sample_every=getattr(obs, "sample_every", 1))
 
     gates = [make_gate(cfg, g) for g in range(G)]
     replicas = [build_group(sim, cfg, g, gates[g]) for g in range(G)]
@@ -337,11 +364,17 @@ def run_sharded_config(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
                       c.done_time)
             for c in clients]
     gate_rows = [gate_stats(g) for g in gates]
+    trace = None
+    if sim.tracer is not None:
+        from repro.obs.spans import canonical_events
+        trace = canonical_events(sim.tracer.events)
     result = assemble_result(
         cfg, rows, sim.commit_log, gate_rows,
         makespan_t=sim.now, messages=sim.stats_messages,
         events=sim.stats_events, wall_s=sim.wall_s,
-        heap_peak=sim.heap_peak, workers=1)
+        heap_peak=sim.heap_peak, workers=1,
+        collapsed=sim.stats_collapsed, trace=trace)
+    sim.commit_log.clear()     # growth fix: residual is on the result
     if cfg.capture_history or cfg.faults:
         from repro.verify import capture_history
         result.history = capture_history(clients)
@@ -363,7 +396,8 @@ def assemble_result(cfg: ShardedRunConfig, client_rows: List[ClientRow],
                     events: int = 0, wall_s: float = 0.0,
                     heap_peak: int = 0, workers: int = 1,
                     barriers: int = 0, idle_wait_frac: float = 0.0,
-                    per_engine: Optional[List[EngineStats]] = None
+                    per_engine: Optional[List[EngineStats]] = None,
+                    collapsed: int = 0, trace: Optional[list] = None
                     ) -> ShardedRunResult:
     """Shared metric math: one code path for serial and parallel runs, so
     identical inputs give bit-identical outputs. ``commit_log`` maps
@@ -407,4 +441,6 @@ def assemble_result(cfg: ShardedRunConfig, client_rows: List[ClientRow],
         events_per_sec=events / wall_s if wall_s > 0 else 0.0,
         wall_s=wall_s, heap_peak=heap_peak, workers=workers,
         barriers=barriers, idle_wait_frac=idle_wait_frac,
-        per_engine=per_engine or [])
+        per_engine=per_engine or [], collapsed=collapsed,
+        commit_log_residual=len(commit_log) - committed,
+        trace=trace or [])
