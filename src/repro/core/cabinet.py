@@ -36,6 +36,7 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
         self.pending[bid] = rec
         todo = []
         tr = self.sim.tracer
+        lm = self.lease_mgr
         for op in ops:
             if op.op_id in self.rsm.applied_ops:       # client retry
                 if op.commit_time < 0:
@@ -47,6 +48,18 @@ class CabinetReplica(SlowPathMixin, BaseReplica):
                         if tr is not None:
                             tr.ev("commit", now, self.node_id,
                                   op.op_id, op.path)
+                self.credit_op(msg.src, bid, op.op_id)
+                continue
+            # Cabinet-style leader reads: under a fresh promise-based
+            # leader lease the leader answers reads from its own RSM —
+            # no instance, no quorum round (repro.core.leases)
+            if lm is not None and op.kind == "r" \
+                    and lm.leader_serve(op, now):
+                if tr is not None and tr.sampled(op.op_id):
+                    # served without an instance: emit the ingress span
+                    # the critical-path analyzer keys local reads on
+                    tr.ev("ingress", now, self.node_id, op.op_id, op.obj,
+                          op.submit_time, op.client)
                 self.credit_op(msg.src, bid, op.op_id)
                 continue
             rec["remaining"].add(op.op_id)

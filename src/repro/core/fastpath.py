@@ -62,6 +62,7 @@ class FastBatch:
     observe: List[Op] = dataclasses.field(default_factory=list)
     deps: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
     replied: set = dataclasses.field(default_factory=set)
+    lease_waits: List[int] = dataclasses.field(default_factory=list)
 
 
 class FastPathMixin:
@@ -132,6 +133,13 @@ class FastPathMixin:
             return
         src = msg.src
         fb.replied.add(src)
+        if fb.lease_waits:
+            # a decided write in this batch is gated on a lease: this
+            # reply doubles as the replier's revocation ack
+            lm = self.lease_mgr
+            for k in fb.lease_waits:
+                lm.wait_vote(k, src, now)
+            self._fast_gc(fb)
         tr = self.sim.tracer
         if tr is not None:       # batch-level: always recorded (no sampling)
             tr.ev("fast_accept", now, self.node_id, fb.batch_id, src,
@@ -161,6 +169,9 @@ class FastPathMixin:
             fb.leader_voted = True
             for i, dep in msg.payload.get("deps", {}).items():
                 fb.deps[fb.ops[i].op_id] = [dep]
+            linfo = msg.payload.get("leases")
+            if linfo is not None and self.lease_mgr is not None:
+                self.lease_mgr.merge_info(fb.ops, linfo)
         # latency observations feed the dynamic weight rule (§3.1);
         # fb.observe pre-selects the repeat-access objects worth tracking
         lat = now - fb.propose_time
@@ -200,6 +211,24 @@ class FastPathMixin:
             deps = {op.op_id: fb.deps.get(op.op_id, []) for op in committed}
         else:
             deps = {}
+        lm = self.lease_mgr
+        if lm is not None:
+            key = lm.gate_commit(
+                committed, now,
+                lambda t, ops=committed, d=deps, b=fb:
+                    self._fast_finalize_gated(b, ops, d, t),
+                set(self._others) - fb.replied)
+            if key is not None:
+                # a write hit a live read lease: the decision stands
+                # (resolved above) but the stamp/apply/broadcast waits for
+                # the remaining round acks — or the lease expiry
+                fb.lease_waits.append(key)
+                return
+        self._fast_finalize(committed, deps, now)
+        self._fast_gc(fb)
+
+    def _fast_finalize(self, committed: List[Op], deps: dict,
+                       now: float) -> None:
         for op in committed:
             op.path = op.path or "fast"
         self.apply_commit_batch(committed, deps, now, "fast")
@@ -207,6 +236,10 @@ class FastPathMixin:
                        {"ops": committed, "deps": deps},
                        size_ops=len(committed))
         self.flush_credits()
+
+    def _fast_finalize_gated(self, fb: FastBatch, committed: List[Op],
+                             deps: dict, now: float) -> None:
+        self._fast_finalize(committed, deps, now)
         self._fast_gc(fb)
 
     def _divert(self, fb: FastBatch, which: np.ndarray, now: float,
@@ -229,10 +262,17 @@ class FastPathMixin:
         self._fast_gc(fb)
 
     def _fast_gc(self, fb: FastBatch) -> None:
-        if fb.n_resolved >= len(fb.ops):
-            self.fast_batches.pop(fb.batch_id, None)
-            if fb.timer is not None:
-                fb.timer.cancel()
+        if fb.n_resolved < len(fb.ops):
+            return
+        if fb.lease_waits:
+            lm = self.lease_mgr
+            fb.lease_waits = [k for k in fb.lease_waits
+                              if lm is not None and k in lm.waits]
+            if fb.lease_waits:
+                return        # batch lives on to feed late acks to the wait
+        self.fast_batches.pop(fb.batch_id, None)
+        if fb.timer is not None:
+            fb.timer.cancel()
 
     def on_fast_timeout(self, payload: dict, now: float) -> None:
         fb = self.fast_batches.get(payload["fb"])
@@ -261,10 +301,17 @@ class FastPathMixin:
         slow_count = self._slow_obj_count
         last_applied = self.last_applied
         in_flight = self.in_flight
+        lm = self.lease_mgr
         cutoff = now - self.gc_timeout
         for i, op in enumerate(ops):
             obj = op.obj
             op_id = op.op_id
+            if lm is not None and op.kind == "w":
+                # regardless of the vote below: a write this replica has
+                # SEEN might still commit elsewhere, so local serving on
+                # its object must pause until it applies (or the round
+                # provably dies and the entry ages out of grant votes)
+                lm.note_write(obj, op_id, now)
             d = in_flight.get(obj)
             conflict = False
             if d is not None:
@@ -305,6 +352,15 @@ class FastPathMixin:
         if am_leader:
             payload["lead"] = True
             payload["deps"] = deps
+            if self.lease_mgr is not None:
+                # piggyback the leader's live-lease excerpt on the co-sign:
+                # a committer whose own lease table missed a grant round
+                # (e.g. votes raced its proposal) still gates the commit —
+                # the leader provably saw either the write (votes no on
+                # the lease) or the lease (this excerpt)
+                linfo = self.lease_mgr.lease_info(ops, now)
+                if linfo is not None:
+                    payload["leases"] = linfo
         self.send(msg.src, "fast_accept", payload)
 
     def on_fast_commit(self, msg: Msg, now: float) -> None:

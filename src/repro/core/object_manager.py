@@ -90,6 +90,10 @@ class ObjectManager:
         # replayed duplicates from the old owner group may still arrive)
         self.epochs: Dict[int, int] = {}
         self._fresh: Dict[int, int] = {}
+        # optional hook (repro.core.leases): custody changes void any read
+        # lease this replica holds on the object — the new owner group never
+        # saw our grant round, so serving from it would miss their writes
+        self.lease_invalidate = None
 
     # -- ownership epochs (sharded deployments, WPaxos-style stealing) ------
 
@@ -110,6 +114,8 @@ class ObjectManager:
         self.in_flight.pop(obj, None)
         self.classes.pop(obj, None)
         self._clean_streak.pop(obj, None)
+        if self.lease_invalidate is not None:
+            self.lease_invalidate(obj)
         if self.post_migration_slow > 0:
             self._fresh[obj] = self.post_migration_slow
         return True

@@ -89,7 +89,8 @@ class BaseReplica(Node):
     HB_TIMEOUT = 45e-3
 
     def __init__(self, node_id: int, sim: Simulation, *, t_fail: int,
-                 steepness: Optional[float] = None, group_cap: int = 64):
+                 steepness: Optional[float] = None, group_cap: int = 64,
+                 leases=None):
         super().__init__(node_id, sim)
         n = sim.n
         self.t_fail = t_fail
@@ -166,6 +167,20 @@ class BaseReplica(Node):
         # runs drivers stay fresh and the sweep never sends a message.
         self._accepted_ops: Dict[int, tuple] = {}
         self._sweep_armed = False
+        # read leases (repro.core.leases): None unless the Scenario's
+        # default-off ``leases`` knob is set — every hook below is guarded
+        # by an ``is not None`` test, so disabled runs stay bit-identical.
+        # The promise fields back the leader lease: while fresh, this
+        # replica accepts slow proposals only from ``_promise_to`` and
+        # never self-candidates (with leases off both stay at their
+        # sentinels and every check short-circuits).
+        self._promise_to = -1
+        self._promise_until = -1.0
+        if leases is not None:
+            from repro.core.leases import LeaseManager
+            self.lease_mgr = LeaseManager(self, leases)
+        else:
+            self.lease_mgr = None
 
     # -- weights -------------------------------------------------------------
 
@@ -238,7 +253,7 @@ class BaseReplica(Node):
         if now <= self._leader_until:
             return self._leader_memo
         candidate = (not self.recovering and now >= self._lead_after
-                     and not self._isolated)
+                     and not self._isolated and now >= self._promise_until)
         me = self.node_id
         n = self.sim.n
         last_hb = self.last_hb
@@ -408,6 +423,8 @@ class BaseReplica(Node):
         if hasattr(self, "pending"):
             self.pending.clear()
             self.op2batch.clear()
+        if self.lease_mgr is not None:
+            self.lease_mgr.on_recover(now)
         self._request_sync(now, attempt=0)
 
     def _request_sync(self, now: float, attempt: int) -> None:
@@ -429,7 +446,7 @@ class BaseReplica(Node):
         c = self.sim.costs
         self.sim.busy(self.node_id, c.c_parse * len(self.rsm.applied_ops)
                       * c.speed(self.node_id))
-        self.send(msg.src, "sync_state", {
+        payload = {
             "store": dict(self.rsm.store),
             "applied": {k: list(v) for k, v in self.rsm.applied.items()},
             "applied_ops": set(self.rsm.applied_ops),
@@ -441,7 +458,13 @@ class BaseReplica(Node):
             # order: without it a recovered node applies later commits
             # ahead of a blocked earlier one and diverges per-object
             "obj_buffer": {k: list(v) for k, v in self._obj_buffer.items()},
-        }, size_ops=len(self.rsm.applied_ops))
+        }
+        if self.lease_mgr is not None:
+            # lease table + revocation barriers ride the snapshot: a
+            # healing replica must know which reads it may NOT serve
+            payload["leases"] = self.lease_mgr.export_state()
+        self.send(msg.src, "sync_state", payload,
+                  size_ops=len(self.rsm.applied_ops))
 
     def on_sync_state(self, msg: Msg, now: float) -> None:
         if not self.recovering:
@@ -454,6 +477,8 @@ class BaseReplica(Node):
         self.last_slow = dict(p["last_slow"])
         self.last_applied = dict(p.get("last_applied", {}))
         self._obj_buffer = {k: list(v) for k, v in p["obj_buffer"].items()}
+        if self.lease_mgr is not None and "leases" in p:
+            self.lease_mgr.install_state(p["leases"], now)
         for obj, entries in self._obj_buffer.items():
             for op, _, _ in entries:
                 self.set_timer(self.gc_timeout, "dep_timeout",
@@ -691,7 +716,49 @@ class BaseReplica(Node):
             self._hb_timer = self.set_timer(self.HB_INTERVAL, "hb")
             self._check_isolation(now)
             return
+        if name == "lease_t":
+            if self.lease_mgr is not None:
+                self.lease_mgr.on_timer(payload, now)
+            return
         self.on_protocol_timer(name, payload, now)
+
+    # -- read leases (repro.core.leases) -----------------------------------
+    # Lease traffic only exists when every replica was constructed with a
+    # LeaseManager; the None guards make stray messages harmless (e.g. a
+    # kill-revoke arriving after a run reconfigures).
+
+    def on_lease_req(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None and not self.recovering \
+                and not self._isolated:
+            self.lease_mgr.on_req(msg, now)
+
+    def on_lease_vote(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None and not self.recovering:
+            self.lease_mgr.on_vote(msg, now)
+
+    def on_lease_install(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None:
+            self.lease_mgr.on_install(msg, now)
+
+    def on_lease_abort(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None and not self.recovering:
+            self.lease_mgr.on_abort(msg, now)
+
+    def on_lease_revoke(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None:
+            self.lease_mgr.on_revoke(msg, now)
+
+    def on_lease_revoke_ack(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None:
+            self.lease_mgr.on_revoke_ack(msg, now)
+
+    def on_llease_req(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None:
+            self.lease_mgr.on_ll_req(msg, now)
+
+    def on_llease_grant(self, msg: Msg, now: float) -> None:
+        if self.lease_mgr is not None and not self.recovering:
+            self.lease_mgr.on_ll_grant(msg, now)
 
     # -- client credit flow ------------------------------------------------------
     # credits carry op_ids (not counts): with client retries the same op may

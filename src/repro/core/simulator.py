@@ -988,6 +988,10 @@ class RunResult:
     latency_p99_ms: float
     fast_path_frac: float
     messages: int
+    # fraction of committed reads served locally under a read lease
+    # (repro.core.leases); 0.0 when leases are off or the workload is
+    # write-only. Deterministic, so part of the same-seed contract.
+    read_local_frac: float = 0.0
     # engine telemetry (wall-clock side — excluded from determinism checks)
     events: int = 0
     events_per_sec: float = 0.0
@@ -1022,6 +1026,12 @@ def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
     ops = [op for c in clients for op in c.ops if op.commit_time >= 0]
     lat = np.array([op.commit_time - op.submit_time for op in ops]) * 1e3
     fast = sum(1 for op in ops if op.path == "fast")
+    reads = local = 0
+    for op in ops:
+        if op.kind == "r":
+            reads += 1
+            if op.path == "local":
+                local += 1
     makespan = max(sim.now - t_start, 1e-9)
     return RunResult(
         protocol=protocol, n_replicas=sim.n, n_clients=len(clients),
@@ -1031,6 +1041,7 @@ def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
         latency_p50_ms=float(np.percentile(lat, 50)) if len(lat) else float("nan"),
         latency_p99_ms=float(np.percentile(lat, 99)) if len(lat) else float("nan"),
         fast_path_frac=fast / len(ops) if ops else 0.0,
+        read_local_frac=local / reads if reads else 0.0,
         messages=sim.stats_messages,
         events=sim.stats_events,
         events_per_sec=(sim.stats_events / sim.wall_s

@@ -42,6 +42,7 @@ class SlowInstance:
     deps: Dict[int, List[int]]
     committed: bool = False
     timer: object = None      # slow_inst_timeout handle (cancelled on commit)
+    lease_wait: object = None # pending revocation-wait key (leases on)
 
 
 class SlowPathMixin:
@@ -170,8 +171,13 @@ class SlowPathMixin:
                 for op in ops:
                     if sampled(op.op_id):
                         tr.ev("slow_enqueue", now, self.node_id, op.op_id)
+            lm = self.lease_mgr
             for op in ops:
                 self._slow_pending_add(op)
+                if lm is not None and op.kind == "w":
+                    # leader-side write visibility for lease votes: queued
+                    # slow writes block grants until applied
+                    lm.note_write(op.obj, op.op_id, now)
             self.slow_queue.append(ops)
         self._slow_kick(now)
 
@@ -241,6 +247,11 @@ class SlowPathMixin:
                                   {"inst": inst.inst_id}), now)
             return
         inst.acked.add(msg.src)
+        if inst.lease_wait is not None:
+            # decided instance gated on a lease: this accept doubles as
+            # the follower's revocation ack
+            self.lease_mgr.wait_vote(inst.lease_wait, msg.src, now)
+            return
         inst.psum += float(self.node_weights()[msg.src])
         tr = self.sim.tracer
         if tr is not None:   # instance-level: always recorded (no sampling)
@@ -263,6 +274,22 @@ class SlowPathMixin:
                 if sampled(op.op_id):
                     tr.ev("slow_commit", now, self.node_id,
                           inst.inst_id, op.op_id)
+        lm = self.lease_mgr
+        if lm is not None:
+            key = lm.gate_commit(
+                inst.ops, now, lambda t, i=inst: self._slow_finalize(i, t),
+                set(self._others) - inst.acked)
+            if key is not None:
+                # a write hit a live read lease: the decision stands but
+                # the stamp/broadcast waits for the remaining accept acks
+                # (or lease expiry). The mutex stays held — that residual
+                # quorum-to-all gap IS the leased-write cost the churn
+                # bench measures.
+                inst.lease_wait = key
+                return
+        self._slow_finalize(inst, now)
+
+    def _slow_finalize(self, inst: SlowInstance, now: float) -> None:
         self.broadcast(self._others, "slow_commit",
                        {"ops": inst.ops, "deps": inst.deps},
                        size_ops=len(inst.ops))
@@ -273,7 +300,11 @@ class SlowPathMixin:
 
     def on_slow_nack(self, msg: Msg, now: float) -> None:
         inst = self.slow_inst
-        if inst is None or msg.payload["inst"] != inst.inst_id:
+        if inst is None or msg.payload["inst"] != inst.inst_id \
+                or inst.committed:
+            # committed means DECIDED: with leases on, a decided instance
+            # can sit in slow_inst awaiting revocation acks — a late nack
+            # must not re-drive (and double-commit) it
             return
         # lost leadership: hand the instance to the current leader
         if inst.timer is not None:
@@ -291,12 +322,23 @@ class SlowPathMixin:
         if self._isolated:
             return        # no votes from behind a partition (split-brain
                           # guard; the proposer's instance times out)
-        if msg.src != self.current_leader(now):
+        if now < self._promise_until:
+            # fresh leader-lease promise (repro.core.leases): accept only
+            # from the promised leader, whatever the heartbeat view says —
+            # the promise is what lets that leader serve reads locally
+            if msg.src != self._promise_to:
+                self.send(msg.src, "slow_nack",
+                          {"inst": msg.payload["inst"]})
+                return
+        elif msg.src != self.current_leader(now):
             self.send(msg.src, "slow_nack", {"inst": msg.payload["inst"]})
             return
+        lm = self.lease_mgr
         for op in msg.payload["ops"]:
             # cross-path guard (Thm 2): fast attempts now see a conflict
             self.register_inflight(op.obj, op.op_id, now)
+            if lm is not None and op.kind == "w":
+                lm.note_write(op.obj, op.op_id, now)
             # accepted-op record: if the leader is lost right after this
             # instance crosses its threshold, the decision survives here
             self._note_accepted(op, msg.src, now)

@@ -25,6 +25,9 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
         super().__init__(node_id, sim, t_fail=t_fail, steepness=steepness,
                          **kw)
         self.om = ObjectManager()
+        if self.lease_mgr is not None:
+            # ownership epoch bumps (shard stealing) void local leases
+            self.om.lease_invalidate = self.lease_mgr.invalidate_obj
         self._init_fastpath()
         self._init_slowpath()
         # client batch bookkeeping: batch_id -> {client, remaining op_ids}
@@ -46,6 +49,7 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
         slow_count = self._slow_obj_count
         node_id = self.node_id
         tr = self.sim.tracer
+        lm = self.lease_mgr
         for op in ops:
             op_id = op.op_id
             if op_id in applied_ops:                   # client retry of a
@@ -57,6 +61,17 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
                         commit_log[op_id] = (now, op.path)
                         if tr is not None:
                             tr.ev("commit", now, node_id, op_id, op.path)
+                self.credit_op(msg.src, bid, op_id)
+                continue
+            # lease-held reads commit here, in zero network round-trips
+            # (serve_read also absorbs retries of reads lease-stamped at
+            # another replica, so consensus never re-executes them)
+            if lm is not None and op.kind == "r" and lm.serve_read(op, now):
+                if tr is not None and tr.sampled(op_id):
+                    # lease-served reads skip the routing block below, so
+                    # give the critical-path analyzer their ingress span
+                    tr.ev("ingress", now, node_id, op_id, op.obj,
+                          op.submit_time, op.client)
                 self.credit_op(msg.src, bid, op_id)
                 continue
             remaining.add(op_id)
@@ -84,6 +99,8 @@ class WocReplica(FastPathMixin, SlowPathMixin, BaseReplica):
                           "fast", "independent")
                 # coordinator's own in-flight registration (self-vote side)
                 self.register_inflight(op.obj, op_id, now)
+                if lm is not None and op.kind == "w":
+                    lm.note_write(op.obj, op_id, now)
                 fast_ops.append(op)
             else:
                 if samp:

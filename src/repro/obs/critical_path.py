@@ -19,10 +19,18 @@ into additive components:
                    ``straggler_by_node``,
   ``dep_stall``    quorum decision -> commit stamp (dependency-ordered
                    apply buffering and force-apply timeouts),
+  ``lease``        leases on: quorum decision -> commit stamp time a
+                   decided write spent waiting out a read lease
+                   (remaining round acks or expiry — the revocation
+                   pause, keyed off the sampled ``lease_wait`` span),
   ``other``        the (near-zero) remainder, including ops whose span
                    is incomplete (sampled out or committed via the
                    recovery/retry path with no quorum round of their
                    own).
+
+Reads served locally under a lease (path ``"local"``) get their own
+breakdown bucket — they never run a quorum round, so their latency is
+ingress plus coordinator service.
 
 Path mix (``fast_frac``) is computed from the *always-recorded* commit
 stamp events, so it equals ``collect_metrics``/``assemble_result`` path
@@ -36,7 +44,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 _COMPONENTS = ("ingress_s", "coord_s", "queue_s", "quorum_link_s",
-               "straggler_s", "dep_stall_s", "other_s")
+               "straggler_s", "dep_stall_s", "lease_s", "other_s")
 
 
 @dataclasses.dataclass
@@ -50,6 +58,7 @@ class PathBreakdown:
     quorum_link_s: float = 0.0
     straggler_s: float = 0.0
     dep_stall_s: float = 0.0
+    lease_s: float = 0.0
     other_s: float = 0.0
 
     def add(self, total: float, **parts: float) -> None:
@@ -77,9 +86,11 @@ class CriticalPathReport:
     committed: int
     fast_committed: int
     slow_committed: int
+    local_committed: int                # lease-served local reads
     fast_frac: float
     fast: PathBreakdown
     slow: PathBreakdown
+    local: PathBreakdown
     # straggler seconds charged to the responder whose (decisive) accept
     # closed each quorum — the node everyone was waiting for
     straggler_by_node: Dict[int, float]
@@ -97,10 +108,12 @@ class CriticalPathReport:
             "committed": self.committed,
             "fast_committed": self.fast_committed,
             "slow_committed": self.slow_committed,
+            "local_committed": self.local_committed,
             "fast_frac": self.fast_frac,
             "analyzed": self.analyzed,
             "fast": self.fast.to_dict(),
             "slow": self.slow.to_dict(),
+            "local": self.local.to_dict(),
             "straggler_by_node": {str(k): v for k, v in
                                   sorted(self.straggler_by_node.items())},
         }
@@ -126,6 +139,7 @@ def analyze_events(events: List[tuple],
     enqueue: Dict[int, float] = {}
     accepts: Dict[Tuple[str, int], List[Tuple[float, int]]] = {}
     stall_t: Dict[Tuple[int, int], float] = {}         # (node, op) -> t
+    lease_wait_t: Dict[Tuple[int, int], float] = {}    # (node, op) -> t
 
     for e in events:
         t, kind, node = e[0], e[1], e[2]
@@ -151,16 +165,21 @@ def analyze_events(events: List[tuple],
             inst_decide.setdefault((e[3], e[4]), t)
         elif kind == "dep_stall":
             stall_t.setdefault((node, e[3]), t)
+        elif kind == "lease_wait":
+            lease_wait_t.setdefault((node, e[3]), t)
 
-    fast_bd, slow_bd = PathBreakdown(), PathBreakdown()
+    fast_bd, slow_bd, local_bd = (PathBreakdown(), PathBreakdown(),
+                                  PathBreakdown())
     straggler_by_node: Dict[int, float] = {}
-    n_fast = n_slow = analyzed = 0
+    n_fast = n_slow = n_local = analyzed = 0
 
     for op_id, (commit_t, commit_node, path) in sorted(commits.items()):
         if window is not None and not (window[0] <= commit_t < window[1]):
             continue
         if path == "fast":
             n_fast += 1
+        elif path == "local":
+            n_local += 1
         else:
             n_slow += 1
         ing = ingress.get(op_id)
@@ -168,7 +187,9 @@ def analyze_events(events: List[tuple],
             continue                    # sampled out: mix only
         ingress_t, submit = ing
         total = commit_t - submit
-        bd = fast_bd if path == "fast" else slow_bd
+        bd = (fast_bd if path == "fast"
+              else local_bd if path == "local" else slow_bd)
+        wait_t = lease_wait_t.get((commit_node, op_id))
 
         if path == "fast" and op_id in fb_of_op:
             fb = fb_of_op[op_id]
@@ -178,14 +199,22 @@ def analyze_events(events: List[tuple],
                    if a[0] <= decide_t]
             parts, decisive = _quorum_parts(propose_t, decide_t, arr)
             stall = stall_t.get((commit_node, op_id))
+            if wait_t is not None:
+                # revocation pause: the gate engaged at decide time and
+                # the stamp waited for the remaining round acks / expiry
+                lease_s = max(0.0, commit_t - wait_t)
+                dep_stall_s = max(0.0, wait_t - decide_t)
+            else:
+                lease_s = 0.0
+                dep_stall_s = (commit_t - decide_t
+                               if stall is not None or commit_t > decide_t
+                               else 0.0)
             bd.add(total,
                    ingress_s=ingress_t - submit,
                    coord_s=propose_t - ingress_t,
-                   dep_stall_s=(commit_t - decide_t
-                                if stall is not None or commit_t > decide_t
-                                else 0.0),
+                   dep_stall_s=dep_stall_s, lease_s=lease_s,
                    **parts)
-        elif path != "fast" and op_id in inst_of_op:
+        elif path not in ("fast", "local") and op_id in inst_of_op:
             inst = inst_of_op[op_id]
             propose_t = inst_propose.get(inst, ingress_t)
             decide_t = inst_decide.get((inst, op_id), commit_t)
@@ -193,11 +222,17 @@ def analyze_events(events: List[tuple],
             arr = [a for a in accepts.get(("s", inst), ())
                    if a[0] <= decide_t]
             parts, decisive = _quorum_parts(propose_t, decide_t, arr)
+            if wait_t is not None:
+                lease_s = max(0.0, commit_t - wait_t)
+                dep_stall_s = max(0.0, wait_t - decide_t)
+            else:
+                lease_s = 0.0
+                dep_stall_s = commit_t - decide_t
             bd.add(total,
                    ingress_s=ingress_t - submit,
                    coord_s=enq_t - ingress_t,
                    queue_s=propose_t - enq_t,
-                   dep_stall_s=commit_t - decide_t,
+                   dep_stall_s=dep_stall_s, lease_s=lease_s,
                    **parts)
         else:
             # committed without a quorum round of its own (retry hit on
@@ -212,11 +247,12 @@ def analyze_events(events: List[tuple],
                 straggler_by_node[src] = \
                     straggler_by_node.get(src, 0.0) + amount
 
-    committed = n_fast + n_slow
+    committed = n_fast + n_slow + n_local
     return CriticalPathReport(
         committed=committed, fast_committed=n_fast, slow_committed=n_slow,
+        local_committed=n_local,
         fast_frac=n_fast / committed if committed else 0.0,
-        fast=fast_bd, slow=slow_bd,
+        fast=fast_bd, slow=slow_bd, local=local_bd,
         straggler_by_node=straggler_by_node, analyzed=analyzed)
 
 

@@ -48,6 +48,13 @@ ARG_NAMES: Dict[str, Sequence[str]] = {
     "commit":      ("op_id", "path"),
     "dep_stall":   ("op_id", "obj", "n_deps"),
     "ema":         ("peer", "weight"),
+    "lease_req":   ("obj", "epoch"),
+    "lease_renew": ("obj", "epoch"),
+    "lease_grant": ("obj", "epoch", "renewal"),
+    "lease_revoke": ("obj", "epoch", "n_ops"),
+    "lease_wait":  ("op_id", "obj"),
+    "lease_local": ("op_id", "obj"),
+    "lease_leader": ("until",),
     "steal_hint":  ("obj",),
     "steal_fence": ("obj",),
     "steal_grant": ("obj", "epoch"),

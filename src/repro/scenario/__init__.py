@@ -21,8 +21,8 @@ here would cycle back into them.
 from repro.scenario.registry import (ProtocolInfo, protocol_class,
                                      protocol_info, protocol_names,
                                      protocols_with, register_protocol)
-from repro.scenario.spec import (Observability, Scenario, Sharding,
-                                 Verification, fault_from_dict,
+from repro.scenario.spec import (Leases, Observability, Scenario,
+                                 Sharding, Verification, fault_from_dict,
                                  fault_to_dict)
 from repro.scenario.workloads import (BurstyWorkload, HotspotDriftWorkload,
                                       ZipfWorkload, make_workload,
@@ -30,6 +30,7 @@ from repro.scenario.workloads import (BurstyWorkload, HotspotDriftWorkload,
                                       workload_ref)
 
 __all__ = ["Scenario", "Sharding", "Verification", "Observability",
+           "Leases",
            "run_scenario",
            "ProtocolInfo", "register_protocol", "protocol_info",
            "protocol_class", "protocol_names", "protocols_with",

@@ -27,6 +27,19 @@ from repro.shard.runner import (ShardedRunArtifacts, ShardedRunConfig,
                                 run_sharded_config)
 
 
+def _lease_cfg(sc: Scenario):
+    """Lower the declarative Leases knob to the picklable LeaseConfig the
+    replica constructor takes (None when disabled — the subsystem is then
+    never constructed and the run is bit-identical to pre-lease builds)."""
+    ls = sc.leases
+    if ls is None or not ls.enabled:
+        return None
+    from repro.core.leases import LeaseConfig
+    return LeaseConfig(duration_s=ls.duration_s,
+                       renew_margin=ls.renew_margin,
+                       grant_after_reads=ls.grant_after_reads)
+
+
 def lower_sharded(sc: Scenario) -> ShardedRunConfig:
     """The sharded run plan: a Scenario flattened onto the internal
     ShardedRunConfig carrier (also what parallel workers unpickle)."""
@@ -42,7 +55,8 @@ def lower_sharded(sc: Scenario) -> ShardedRunConfig:
         steal_cooldown=sh.steal_cooldown, workload=sc.workload,
         costs=sc.costs, seed=sc.seed, sim_time_cap=sc.sim_time_cap,
         workers=sh.workers, faults=sc.faults,
-        capture_history=sc.verify.capture_history, obs=sc.obs)
+        capture_history=sc.verify.capture_history, obs=sc.obs,
+        leases=_lease_cfg(sc))
 
 
 def run_scenario(sc: Scenario) -> Union[RunArtifacts,
@@ -74,7 +88,9 @@ def _run_flat(sc: Scenario) -> RunArtifacts:
         sim.tracer = Tracer(sample_every=sc.obs.sample_every)
     cls = protocol_class(sc.protocol)
     t = max(1, min(sc.t_fail, (sc.n_replicas - 1) // 2))
-    replicas = [cls(i, sim, t_fail=t, group_cap=max(sc.batch_size, 1))
+    leases = _lease_cfg(sc)
+    replicas = [cls(i, sim, t_fail=t, group_cap=max(sc.batch_size, 1),
+                    leases=leases)
                 for i in range(sc.n_replicas)]
     for rep in replicas:
         sim.add_node(rep)

@@ -36,6 +36,11 @@ class ProtocolInfo:
       only is verified; benches/verification restrict such protocols to
       write-only workloads — EPaxos's arrival-order commit
       simplification).
+    * ``lease_reads`` — the replica class honors ``Scenario.leases``
+      (repro.core.leases): linearizable local reads under weighted
+      object leases (or a promise-based leader lease for leader-based
+      protocols). Scenario validation rejects ``leases`` on protocols
+      without it.
     """
 
     name: str
@@ -43,6 +48,7 @@ class ProtocolInfo:
     leader_based: bool = False
     supports_sharding: bool = True
     reads: str = "linearizable"
+    lease_reads: bool = False
     description: str = ""
 
 
@@ -93,15 +99,15 @@ def _register_builtins() -> None:
 
     register_protocol(ProtocolInfo(
         "woc", WocReplica, leader_based=False, supports_sharding=True,
-        reads="linearizable",
+        reads="linearizable", lease_reads=True,
         description="dual-path weighted object consensus (the paper)"))
     register_protocol(ProtocolInfo(
         "cabinet", CabinetReplica, leader_based=True, supports_sharding=True,
-        reads="linearizable",
+        reads="linearizable", lease_reads=True,
         description="weighted single-leader consensus (paper baseline)"))
     register_protocol(ProtocolInfo(
         "paxos", PaxosReplica, leader_based=True, supports_sharding=True,
-        reads="linearizable",
+        reads="linearizable", lease_reads=True,
         description="classic majority MultiPaxos (Cabinet with flat "
                     "weights)"))
     register_protocol(ProtocolInfo(

@@ -78,6 +78,25 @@ class Observability:
 
 
 @dataclasses.dataclass(frozen=True)
+class Leases:
+    """Linearizable local reads via weighted object leases
+    (repro.core.leases). Default-off: with ``Scenario.leases=None`` the
+    lease subsystem is never constructed and runs are bit-identical to
+    pre-lease builds. ``duration_s`` is the lease window (holders stop
+    serving at expiry by their own clock; writers on leased objects wait
+    out revocation acks or the window). ``renew_margin`` is the fraction
+    of the window left when a serving replica starts renewing.
+    ``grant_after_reads`` is how many local read misses an object needs
+    at one replica before it starts a grant round — 1 leases eagerly,
+    higher values keep cold objects lease-free."""
+
+    enabled: bool = True
+    duration_s: float = 0.05
+    renew_margin: float = 0.5
+    grant_after_reads: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
 class Verification:
     """Post-run checking. ``capture_history`` records the client
     invoke/response history on the result (implied by any fault
@@ -107,6 +126,7 @@ class Scenario:
     sharding: Optional[Sharding] = None
     verify: Verification = dataclasses.field(default_factory=Verification)
     obs: Optional[Observability] = None
+    leases: Optional[Leases] = None
 
     # -- validation (fail fast at construction) -----------------------------
 
@@ -181,6 +201,35 @@ class Scenario:
                     f"(expected one of {EXPORT_FORMATS})")
             if ob.export and not ob.trace:
                 raise ValueError("obs.export requires obs.trace=True")
+        ls = self.leases
+        if ls is not None:
+            if not isinstance(ls, Leases):
+                raise ValueError(f"leases must be a Leases spec, "
+                                 f"got {ls!r}")
+            if ls.enabled:
+                if not info.lease_reads:
+                    raise ValueError(
+                        f"protocol {self.protocol!r} does not support "
+                        f"read leases (registry capability "
+                        f"lease_reads=False)")
+                if not ls.duration_s > 0:
+                    raise ValueError(f"leases.duration_s must be > 0, "
+                                     f"got {ls.duration_s!r}")
+                if not 0.0 < ls.renew_margin < 1.0:
+                    raise ValueError(
+                        f"leases.renew_margin must be in (0, 1), "
+                        f"got {ls.renew_margin!r}")
+                if (not isinstance(ls.grant_after_reads, int)
+                        or ls.grant_after_reads < 1):
+                    raise ValueError(
+                        f"leases.grant_after_reads must be an int >= 1, "
+                        f"got {ls.grant_after_reads!r}")
+                if sh is not None and sh.workers > 1:
+                    raise ValueError(
+                        "leases require serial execution (workers=1): "
+                        "revocation and shard fencing cross group "
+                        "boundaries, which the conservative window "
+                        "lookahead does not model")
         if (self.verify.check_linearizable
                 and not (self.verify.capture_history or self.faults)):
             raise ValueError(
@@ -233,6 +282,8 @@ class Scenario:
             "verify": dataclasses.asdict(self.verify),
             "obs": (dataclasses.asdict(self.obs)
                     if self.obs is not None else None),
+            "leases": (dataclasses.asdict(self.leases)
+                       if self.leases is not None else None),
         }
         return d
 
@@ -249,6 +300,7 @@ class Scenario:
         sharding = d.pop("sharding", None)
         verify = d.pop("verify", None)
         obs = d.pop("obs", None)
+        leases = d.pop("leases", None)
         known = {f.name for f in dataclasses.fields(cls)}
         bad = set(d) - known
         if bad:
@@ -267,6 +319,8 @@ class Scenario:
                     else Verification()),
             obs=(obs if isinstance(obs, (Observability, type(None)))
                  else Observability(**obs)),
+            leases=(leases if isinstance(leases, (Leases, type(None)))
+                    else Leases(**leases)),
             **d)
 
     def to_json(self, **kw) -> str:

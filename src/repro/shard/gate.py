@@ -306,7 +306,11 @@ class _ShardGateMixin:
         this (gate) replica's RSM — the in-flight fence+drain that makes
         the transfer linearizable."""
         need = self.gate.admitted.get(obj, ())
-        if all(oid in self.rsm.applied_ops for oid in need):
+        lm = self.lease_mgr
+        if all(oid in self.rsm.applied_ops for oid in need) \
+                and (lm is None or lm.fence_obj(obj, now)):
+            # read leases fence alongside the write drain: no replica may
+            # keep serving local reads past the custody change
             self._shard_grant(obj, now)
         else:
             self.set_timer(self.DRAIN_POLL, "shard_drain", {"obj": obj})

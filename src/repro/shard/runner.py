@@ -79,6 +79,10 @@ class ShardedRunConfig:
     # a scenario import. Tracing works in both serial and parallel modes
     # (workers merge their per-engine traces through canonical_events).
     obs: object = None
+    # lowered lease knob (repro.core.leases.LeaseConfig) or None. Scenario
+    # validation restricts leases to workers=1, so the parallel engines
+    # never see it.
+    leases: object = None
 
 
 @dataclasses.dataclass
@@ -265,7 +269,8 @@ def build_group(sim, cfg: ShardedRunConfig, g: int,
     t = max(1, min(cfg.t_fail, (npg - 1) // 2))
     view = GroupView(sim, g, npg)
     grp = [cls(i, view, gate=gate, t_fail=t,
-               group_cap=max(cfg.batch_size, 1)) for i in range(npg)]
+               group_cap=max(cfg.batch_size, 1),
+               leases=cfg.leases) for i in range(npg)]
     for rep in grp:
         sim.add_node(GroupNodeProxy(rep, view))
         rep.start_heartbeats()
