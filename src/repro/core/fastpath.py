@@ -91,7 +91,7 @@ class FastPathMixin:
         leader = self.current_leader(now)
         fb = FastBatch(
             batch_id=next(self._fb_seq) | (self.node_id << 48),
-            ops=ops, weights=wmat, threshold=table.half_sum,
+            ops=ops, weights=wmat, threshold=table.current_threshold(),
             acc=wmat[:, self.node_id].copy(),        # self-vote (line 4)
             resolved=np.zeros(B, dtype=bool), propose_time=now,
             leader_voted=(leader == self.node_id))

@@ -723,6 +723,26 @@ class LeaseManager:
         self._ll_last_req = now
         self._ll_renew_at = -1.0
 
+    def on_weight_epoch(self, now: float) -> None:
+        """Weight-view install (repro.core.reassign): every lease is a
+        quorum promise made under the *old* weights, so local serving
+        stops here and now. Writer-side gates (``gate_until``, barriers,
+        revocation waits) stay intact — they are the conservative side,
+        and must keep covering holders that have not adopted the new
+        epoch yet (or never will, behind a partition). Grant rounds in
+        flight accumulated old-view weight and are aborted; the leader
+        lease drops its promise set and re-establishes under the new
+        ranking."""
+        for rec in self.records.values():
+            rec.active_until = -1.0
+        for rnd in self.rounds.values():
+            if rnd.timer is not None:
+                rnd.timer.cancel()
+        self.rounds.clear()
+        self.read_seen.clear()
+        self.promises.clear()
+        self._ll_renew_at = -1.0
+
     def export_state(self) -> dict:
         """Lease table for the sync snapshot (state transfer)."""
         return {

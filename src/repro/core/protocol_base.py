@@ -54,6 +54,17 @@ class ObjectWeightTable:
         self._nw: np.ndarray | None = None
         self._ranks = np.empty(n, dtype=np.int64)   # scratch
         self._arange = np.arange(n)
+        # installed weight view (repro.core.reassign): while active, the
+        # epoch-stamped ranking overrides BOTH the per-object EMAs and
+        # the node-level ranking — the view is the shared truth all
+        # replicas quorum under, private telemetry resumes on restore.
+        self.rank_of: np.ndarray | None = None
+        # flat fallback (graceful degradation): when the view-weighted
+        # heartbeat-fresh set cannot strictly cross half_sum, quorums
+        # degrade to count-majorities (weights 1, threshold n/2)
+        self.flat = False
+        self._flat_w = np.ones(n, dtype=np.float64)
+        self._flat_threshold = n / 2.0
 
     def observe(self, obj: int, replica: int, latency: float) -> None:
         e = self.ema.get(obj)
@@ -67,21 +78,51 @@ class ObjectWeightTable:
         ranks[order] = self._arange
         return self.base[ranks]
 
-    def node_weights(self) -> np.ndarray:
-        """Node-level fallback weights, cached per node-EMA version."""
+    def view_weights(self) -> np.ndarray:
+        """Node weights under the current view, ignoring the flat
+        fallback (the fallback's own trigger test needs these)."""
         if self._nw_version != self.node_version:
-            self._nw = self._weights_of(self.node_ema)
+            ro = self.rank_of
+            self._nw = self.base[ro] if ro is not None \
+                else self._weights_of(self.node_ema)
             self._nw_version = self.node_version
         return self._nw
 
+    def node_weights(self) -> np.ndarray:
+        """Node-level weights, cached per node-EMA/view version."""
+        if self.flat:
+            return self._flat_w
+        return self.view_weights()
+
     def weights_for(self, obj: int) -> np.ndarray:
+        if self.flat:
+            return self._flat_w
+        if self.rank_of is not None:
+            return self.view_weights()
         e = self.ema.get(obj)
         if e is None:
-            return self.node_weights()
+            return self.view_weights()
         return self._weights_of(e)
 
+    def current_threshold(self) -> float:
+        return self._flat_threshold if self.flat else self.half_sum
+
     def threshold_for(self, obj: int) -> float:
-        return self.half_sum                       # T^O = sum(W^O)/2
+        return self.current_threshold()            # T^O = sum(W^O)/2
+
+    def set_rank_override(self, ranking) -> None:
+        """Install (or with ``None`` clear) an epoch-stamped ranking:
+        ``ranking[0]`` gets the top geometric weight. Per-object EMAs
+        are dropped either way — telemetry gathered under the previous
+        weight regime must not leak into the new one."""
+        if ranking is None:
+            self.rank_of = None
+        else:
+            ro = np.empty(self.n, dtype=np.int64)
+            ro[np.asarray(ranking, dtype=np.int64)] = self._arange
+            self.rank_of = ro
+        self.ema.clear()
+        self.node_version += 1
 
 
 class BaseReplica(Node):
@@ -90,7 +131,7 @@ class BaseReplica(Node):
 
     def __init__(self, node_id: int, sim: Simulation, *, t_fail: int,
                  steepness: Optional[float] = None, group_cap: int = 64,
-                 leases=None):
+                 leases=None, reassign=None):
         super().__init__(node_id, sim)
         n = sim.n
         self.t_fail = t_fail
@@ -181,6 +222,16 @@ class BaseReplica(Node):
             self.lease_mgr = LeaseManager(self, leases)
         else:
             self.lease_mgr = None
+        # online weight reassignment (repro.core.reassign): None unless
+        # the Scenario's default-off ``reassign`` knob is set. The
+        # manager piggybacks on the heartbeat timer and sends nothing
+        # without confirmed fault evidence, so knob-on fault-free runs
+        # stay bit-identical to knob-off runs (pinned in tests).
+        if reassign is not None:
+            from repro.core.reassign import ReassignManager
+            self.reassign_mgr = ReassignManager(self, reassign)
+        else:
+            self.reassign_mgr = None
 
     # -- weights -------------------------------------------------------------
 
@@ -191,12 +242,14 @@ class BaseReplica(Node):
         return self.obj_weights.node_weights()
 
     def node_threshold(self) -> float:
-        return self.obj_weights.half_sum
+        return self.obj_weights.current_threshold()
 
     def observe_node(self, replica: int, latency: float, decay=0.85) -> None:
         self.node_ema[replica] = (decay * self.node_ema[replica]
                                   + (1 - decay) * latency)
         self.obj_weights.node_version += 1
+        if self.reassign_mgr is not None:
+            self.reassign_mgr.note_sample(replica, latency)
 
     # -- in-flight map (Theorem 2 machinery) ----------------------------------
 
@@ -258,16 +311,25 @@ class BaseReplica(Node):
         n = self.sim.n
         last_hb = self.last_hb
         hb_to = self.HB_TIMEOUT
-        for r in range(n):
+        # scan order: replica id, unless an epoch-stamped weight view is
+        # installed (repro.core.reassign) — the view IS the shared,
+        # stable ranking the election comment above calls for, so a
+        # demoted (degraded) node stops anchoring leadership too
+        rm = self.reassign_mgr
+        order = rm.ranking if rm is not None else None
+        seen_me = False
+        for r in (range(n) if order is None else order):
             if r == me:
+                seen_me = True
                 if not candidate:
                     continue
-                # smaller ids are all dead. Claim leadership only while a
-                # count-majority of the deployment is heartbeat-fresh: a
-                # cut-off replica ranks ITSELF top-weight in its private
-                # EMA view, so without this lease two partition sides can
-                # both cross their (differently-weighted) slow thresholds
-                # — the split-brain the fault suite reproduces. Weighted
+                # higher-ranked replicas are all dead. Claim leadership
+                # only while a count-majority of the deployment is
+                # heartbeat-fresh: a cut-off replica ranks ITSELF
+                # top-weight in its private EMA view, so without this
+                # lease two partition sides can both cross their
+                # (differently-weighted) slow thresholds — the
+                # split-brain the fault suite reproduces. Weighted
                 # quorum speed is untouched: commits still wait only for
                 # weight > T^N, the lease just pins who may drive them.
                 fresh = [last_hb[p] for p in range(n)
@@ -286,9 +348,10 @@ class BaseReplica(Node):
             if now - last_hb[r] <= hb_to:
                 # valid until this leader's detector window lapses, or we
                 # become a candidate ourselves at _lead_after (only
-                # relevant when r > me), or a smaller id heartbeats
+                # relevant when r ranks below us), or a better-ranked
+                # replica heartbeats
                 until = last_hb[r] + hb_to
-                if r > me and self._lead_after > now:
+                if seen_me and self._lead_after > now:
                     until = min(until, self._lead_after)
                 self._leader_memo = r
                 self._leader_until = until
@@ -388,6 +451,13 @@ class BaseReplica(Node):
 
     def on_heartbeat(self, msg: Msg, now: float) -> None:
         self.last_hb[msg.src] = now
+        rm = self.reassign_mgr
+        if rm is not None and (rm.epoch or msg.payload):
+            # epoch gossip + (with a view installed) rank-order memo
+            # invalidation; fault-free runs never enter (epoch 0, empty
+            # payload), keeping the hot path identical to knob-off
+            if rm.on_heartbeat(msg, now):
+                return
         if msg.src < self._leader_memo:
             self._leader_until = -1.0    # a better leader may be back
 
@@ -425,6 +495,8 @@ class BaseReplica(Node):
             self.op2batch.clear()
         if self.lease_mgr is not None:
             self.lease_mgr.on_recover(now)
+        if self.reassign_mgr is not None:
+            self.reassign_mgr.on_recover(now)
         self._request_sync(now, attempt=0)
 
     def _request_sync(self, now: float, attempt: int) -> None:
@@ -463,6 +535,10 @@ class BaseReplica(Node):
             # lease table + revocation barriers ride the snapshot: a
             # healing replica must know which reads it may NOT serve
             payload["leases"] = self.lease_mgr.export_state()
+        if self.reassign_mgr is not None and self.reassign_mgr.epoch:
+            # the installed weight view rides the snapshot: a rejoining
+            # node must quorum under the ranking the cluster runs on
+            payload["wview"] = self.reassign_mgr.export_state()
         self.send(msg.src, "sync_state", payload,
                   size_ops=len(self.rsm.applied_ops))
 
@@ -479,6 +555,8 @@ class BaseReplica(Node):
         self._obj_buffer = {k: list(v) for k, v in p["obj_buffer"].items()}
         if self.lease_mgr is not None and "leases" in p:
             self.lease_mgr.install_state(p["leases"], now)
+        if self.reassign_mgr is not None and "wview" in p:
+            self.reassign_mgr.install_state(p["wview"], now)
         for obj, entries in self._obj_buffer.items():
             for op, _, _ in entries:
                 self.set_timer(self.gc_timeout, "dep_timeout",
@@ -626,7 +704,8 @@ class BaseReplica(Node):
                 log.append((obj, op_id, op.value))
             else:
                 log.append((obj, op_id, None))
-                op.read_result = store.get(obj)
+                if op.path != "local":  # lease-answered read keeps its answer
+                    op.read_result = store.get(obj)
             fl = in_flight.get(obj)
             if fl is not None:
                 fl.pop(op_id, None)
@@ -701,9 +780,11 @@ class BaseReplica(Node):
                 self.flush_credits()
             return
         if name == "hb":
+            rm = self.reassign_mgr
+            hb_payload = rm.hb_payload() if rm is not None else {}
             for d in self.sim.replicas():
                 if d != self.node_id:
-                    self.send(d, "heartbeat", {})
+                    self.send(d, "heartbeat", hb_payload)
             tr = self.sim.tracer
             if tr is not None:
                 # per-peer latency-EMA samples on the heartbeat cadence:
@@ -715,6 +796,10 @@ class BaseReplica(Node):
                               float(node_ema[d]))
             self._hb_timer = self.set_timer(self.HB_INTERVAL, "hb")
             self._check_isolation(now)
+            if rm is not None:
+                # health monitor on the heartbeat cadence: pure host-side
+                # computation unless confirmed fault evidence exists
+                rm.tick(now)
             return
         if name == "lease_t":
             if self.lease_mgr is not None:
@@ -759,6 +844,29 @@ class BaseReplica(Node):
     def on_llease_grant(self, msg: Msg, now: float) -> None:
         if self.lease_mgr is not None and not self.recovering:
             self.lease_mgr.on_ll_grant(msg, now)
+
+    # -- weight reassignment (repro.core.reassign) --------------------------
+    # Same contract as the lease hooks: traffic only exists when every
+    # replica was constructed with a ReassignManager, and the None guards
+    # make stray messages harmless.
+
+    def on_weight_suspect(self, msg: Msg, now: float) -> None:
+        if self.reassign_mgr is not None and not self.recovering \
+                and not self._isolated:
+            self.reassign_mgr.on_suspect(msg, now)
+
+    def on_weight_install(self, msg: Msg, now: float) -> None:
+        if self.reassign_mgr is not None and not self.recovering:
+            self.reassign_mgr.on_install(msg, now)
+
+    def on_weight_pull(self, msg: Msg, now: float) -> None:
+        if self.reassign_mgr is not None and not self.recovering \
+                and not self._isolated:
+            self.reassign_mgr.on_pull(msg, now)
+
+    def on_weight_view(self, msg: Msg, now: float) -> None:
+        if self.reassign_mgr is not None and not self.recovering:
+            self.reassign_mgr.on_view(msg, now)
 
     # -- client credit flow ------------------------------------------------------
     # credits carry op_ids (not counts): with client retries the same op may

@@ -108,7 +108,13 @@ class RSM:
             self._log.append((obj, op_id, value))
             return value
         self._log.append((obj, op_id, None))
-        op.read_result = self.store.get(obj)
+        # A read already answered from a lease holder keeps that answer:
+        # the op may still ride an older consensus instance to commit
+        # (client retried into the lease path while the instance was
+        # stuck behind a partition), and re-sampling the store here
+        # would overwrite the result after its linearization point.
+        if op.path != "local":
+            op.read_result = self.store.get(obj)
         return op.read_result
 
 

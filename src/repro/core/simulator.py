@@ -338,6 +338,12 @@ class EventEngine:
         # the recorder never posts messages or charges CPU time, so
         # simulated timing is bit-identical with tracing on or off.
         self.tracer = None
+        # weight-view ledger (repro.core.reassign): the live epoch-stamped
+        # ranking — (epoch, ranking-or-None) — plus the install log
+        # (t, epoch, ranking, installer) surfaced as RunResult.weight_epochs.
+        # Deferred symbolic fault selectors resolve against the live view.
+        self.weight_view: tuple = (0, None)
+        self.weight_installs: List[tuple] = []
         # partitioned mode (None/inactive for plain Simulation): foreign
         # lookup table, boundary outbox, and the current window's post
         # event-times (for exact-stop message accounting — see parallel.py)
@@ -582,6 +588,25 @@ class EventEngine:
         self._seq = seq + 1
         heapq.heappush(self._heap, (at, seq, _FAULT, (action, payload)))
 
+    def schedule_dynamic(self, at: float, thunk) -> None:
+        """Schedule a deferred fault action: ``thunk(engine, t)`` runs at
+        ``at`` against live engine state. This is how symbolic fault
+        selectors ("top_weight", "median", ...) bind to the weight view
+        in force when the event fires, not the static seed ranking."""
+        self._schedule_fault(at, "dyn", thunk)
+
+    def note_weight_install(self, t: float, epoch: int, ranking: list,
+                            by: int) -> None:
+        """Record a weight-view install (called by the installing
+        replica's ReassignManager alongside its broadcast)."""
+        if epoch > self.weight_view[0]:
+            self.weight_view = (epoch, list(ranking))
+        self.weight_installs.append((t, epoch, tuple(ranking), by))
+        tr = self.tracer
+        if tr is not None:
+            tr.ev("weight_install", t, by, epoch,
+                  ",".join(map(str, ranking)))
+
     def cut_links(self, pairs, at: float) -> None:
         """From time ``at``, drop every message posted on the directed
         (src, dst) links in ``pairs`` until :meth:`restore_links`."""
@@ -713,10 +738,15 @@ class EventEngine:
                     if hook is not None:
                         hook(t)
                 else:  # _FAULT
+                    action, payload = item
+                    if action == "dyn":
+                        # deferred fault: resolve + apply against live
+                        # state (the thunk does its own trace annotation)
+                        payload(self, t)
+                        continue
                     self._apply_fault(*item)
                     tr = self.tracer
                     if tr is not None:
-                        action, payload = item
                         if action == "degrade":
                             tr.ev("fault", t, payload[0], "degrade",
                                   float(payload[1]
@@ -1005,6 +1035,10 @@ class RunResult:
     # commit_log entries left after matching client ops (ops that never
     # reached a client ack path); the log itself is cleared at run end
     commit_log_residual: int = 0
+    # weight-view install log (repro.core.reassign): (t, epoch, ranking,
+    # installer) per install; empty when the knob is off or no fault
+    # evidence ever confirmed. Deterministic given seed + schedule.
+    weight_epochs: list = dataclasses.field(default_factory=list)
     # client invoke/response history (repro.verify.HistoryEntry records),
     # captured when RunConfig.capture_history is set or a fault schedule is
     # active; deterministic given seed + schedule, unlike the telemetry
@@ -1048,4 +1082,5 @@ def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
                         if sim.wall_s > 0 else 0.0),
         wall_s=sim.wall_s,
         heap_peak=sim.heap_peak,
-        collapsed=sim.stats_collapsed)
+        collapsed=sim.stats_collapsed,
+        weight_epochs=list(sim.weight_installs))

@@ -228,8 +228,14 @@ class SlowPathMixin:
                 if sampled(op.op_id):
                     tr.ev("slow_propose", now, self.node_id,
                           inst.inst_id, op.op_id)
-        self.broadcast(self._others, "slow_propose",
-                       {"inst": inst.inst_id, "ops": ops}, size_ops=len(ops))
+        payload = {"inst": inst.inst_id, "ops": ops}
+        if self.reassign_mgr is not None:
+            # epoch-stamped proposal: followers on a newer weight view
+            # nack it (repro.core.reassign) — the key only appears once
+            # an epoch exists, so fault-free payloads are unchanged
+            self.reassign_mgr.stamp(payload)
+        self.broadcast(self._others, "slow_propose", payload,
+                       size_ops=len(ops))
         inst.timer = self.set_timer(self.sim.costs.timeout,
                                     "slow_inst_timeout",
                                     {"inst": inst.inst_id})
@@ -333,6 +339,13 @@ class SlowPathMixin:
         elif msg.src != self.current_leader(now):
             self.send(msg.src, "slow_nack", {"inst": msg.payload["inst"]})
             return
+        if self.reassign_mgr is not None \
+                and self.reassign_mgr.reject_stale(msg, now):
+            # proposal stamped with a pre-reassignment weight epoch: its
+            # quorum math predates the installed view — bounce it back so
+            # the (demoted) proposer hands the ops to the current leader
+            self.send(msg.src, "slow_nack", {"inst": msg.payload["inst"]})
+            return
         lm = self.lease_mgr
         for op in msg.payload["ops"]:
             # cross-path guard (Thm 2): fast attempts now see a conflict
@@ -379,8 +392,10 @@ class SlowPathMixin:
                     and not inst.committed:
                 missing = [r for r in range(self.sim.n)
                            if r not in inst.acked]
-                self.broadcast(missing, "slow_propose",
-                               {"inst": inst.inst_id, "ops": inst.ops},
+                payload = {"inst": inst.inst_id, "ops": inst.ops}
+                if self.reassign_mgr is not None:
+                    self.reassign_mgr.stamp(payload)
+                self.broadcast(missing, "slow_propose", payload,
                                size_ops=len(inst.ops))
                 inst.timer = self.set_timer(self.sim.costs.timeout,
                                             "slow_inst_timeout",

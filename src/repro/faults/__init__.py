@@ -11,12 +11,13 @@ from repro.faults.nemesis import (Nemesis, fault_times,  # noqa: F401
 from repro.faults.schedule import (Crash, Degrade, FaultEvent,  # noqa: F401
                                    Heal, Partition, Recover,
                                    asym_partition, compile_schedule,
-                                   degrade_top, leader_crash, resolve_node,
-                                   rolling_crashes, sym_partition)
+                                   degrade_top, flap, leader_crash,
+                                   resolve_node, rolling_crashes,
+                                   sym_partition)
 
 __all__ = [
     "Crash", "Recover", "Partition", "Heal", "Degrade", "FaultEvent",
     "compile_schedule", "resolve_node", "leader_crash", "rolling_crashes",
-    "asym_partition", "sym_partition", "degrade_top",
+    "asym_partition", "sym_partition", "degrade_top", "flap",
     "Nemesis", "schedule_end", "fault_times",
 ]

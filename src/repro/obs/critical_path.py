@@ -23,6 +23,11 @@ into additive components:
                    decided write spent waiting out a read lease
                    (remaining round acks or expiry — the revocation
                    pause, keyed off the sampled ``lease_wait`` span),
+  ``reassign``     reassignment on: the decision -> commit gap of ops
+                   whose stamp landed across a weight-view install
+                   (``weight_install`` engine events) — the epoch-fence
+                   drain/handoff pause, split out of ``dep_stall`` so
+                   reassignment cost is visible per path,
   ``other``        the (near-zero) remainder, including ops whose span
                    is incomplete (sampled out or committed via the
                    recovery/retry path with no quorum round of their
@@ -40,11 +45,13 @@ test suite pins that equality across the θ sweep.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 _COMPONENTS = ("ingress_s", "coord_s", "queue_s", "quorum_link_s",
-               "straggler_s", "dep_stall_s", "lease_s", "other_s")
+               "straggler_s", "dep_stall_s", "lease_s", "reassign_s",
+               "other_s")
 
 
 @dataclasses.dataclass
@@ -59,6 +66,7 @@ class PathBreakdown:
     straggler_s: float = 0.0
     dep_stall_s: float = 0.0
     lease_s: float = 0.0
+    reassign_s: float = 0.0
     other_s: float = 0.0
 
     def add(self, total: float, **parts: float) -> None:
@@ -140,6 +148,7 @@ def analyze_events(events: List[tuple],
     accepts: Dict[Tuple[str, int], List[Tuple[float, int]]] = {}
     stall_t: Dict[Tuple[int, int], float] = {}         # (node, op) -> t
     lease_wait_t: Dict[Tuple[int, int], float] = {}    # (node, op) -> t
+    installs: List[float] = []                         # weight-view installs
 
     for e in events:
         t, kind, node = e[0], e[1], e[2]
@@ -167,6 +176,9 @@ def analyze_events(events: List[tuple],
             stall_t.setdefault((node, e[3]), t)
         elif kind == "lease_wait":
             lease_wait_t.setdefault((node, e[3]), t)
+        elif kind == "weight_install":
+            installs.append(t)
+    installs.sort()
 
     fast_bd, slow_bd, local_bd = (PathBreakdown(), PathBreakdown(),
                                   PathBreakdown())
@@ -209,10 +221,15 @@ def analyze_events(events: List[tuple],
                 dep_stall_s = (commit_t - decide_t
                                if stall is not None or commit_t > decide_t
                                else 0.0)
+            reassign_s = 0.0
+            if dep_stall_s > 0.0 and _install_in(installs, decide_t,
+                                                 commit_t):
+                reassign_s, dep_stall_s = dep_stall_s, 0.0
             bd.add(total,
                    ingress_s=ingress_t - submit,
                    coord_s=propose_t - ingress_t,
                    dep_stall_s=dep_stall_s, lease_s=lease_s,
+                   reassign_s=reassign_s,
                    **parts)
         elif path not in ("fast", "local") and op_id in inst_of_op:
             inst = inst_of_op[op_id]
@@ -228,11 +245,16 @@ def analyze_events(events: List[tuple],
             else:
                 lease_s = 0.0
                 dep_stall_s = commit_t - decide_t
+            reassign_s = 0.0
+            if dep_stall_s > 0.0 and _install_in(installs, decide_t,
+                                                 commit_t):
+                reassign_s, dep_stall_s = dep_stall_s, 0.0
             bd.add(total,
                    ingress_s=ingress_t - submit,
                    coord_s=enq_t - ingress_t,
                    queue_s=propose_t - enq_t,
                    dep_stall_s=dep_stall_s, lease_s=lease_s,
+                   reassign_s=reassign_s,
                    **parts)
         else:
             # committed without a quorum round of its own (retry hit on
@@ -254,6 +276,12 @@ def analyze_events(events: List[tuple],
         fast_frac=n_fast / committed if committed else 0.0,
         fast=fast_bd, slow=slow_bd, local=local_bd,
         straggler_by_node=straggler_by_node, analyzed=analyzed)
+
+
+def _install_in(installs: List[float], lo: float, hi: float) -> bool:
+    """Any weight-view install in ``(lo, hi]``? (``installs`` sorted.)"""
+    i = bisect.bisect_right(installs, lo)
+    return i < len(installs) and installs[i] <= hi
 
 
 def _quorum_parts(propose_t: float, decide_t: float,

@@ -61,6 +61,9 @@ ARG_NAMES: Dict[str, Sequence[str]] = {
     "steal_install": ("obj", "epoch"),
     "redirect":    ("obj", "to_group"),
     "fault":       ("action", "detail"),
+    "weight_suspect": ("suspects", "leader"),
+    "weight_install": ("epoch", "ranking"),
+    "weight_adopt": ("epoch", "ranking"),
 }
 
 _COMPACT = {"sort_keys": True, "separators": (",", ":")}

@@ -84,6 +84,14 @@ _NODE_ARG_IDX = {
     "epx_reply": 2,      # src (responder)
     "ema": 0,            # peer
     "slow_forward": 1,   # leader
+    "weight_suspect": 1,  # leader (report target)
+}
+
+# event kinds carrying a comma-joined replica-id list at this arg index
+# (rankings / suspect sets) — every id in the list is translated
+_CSV_ARG_IDX = {
+    "weight_suspect": 0,  # suspect set
+    "weight_adopt": 1,    # installed ranking
 }
 
 
@@ -119,6 +127,11 @@ class MappedTracer:
         idx = _NODE_ARG_IDX.get(kind)
         if idx is not None and idx < len(args):
             args = args[:idx] + (self._map(args[idx]),) + args[idx + 1:]
+        idx = _CSV_ARG_IDX.get(kind)
+        if idx is not None and idx < len(args) and args[idx]:
+            mapped = ",".join(str(self._map(int(p)))
+                              for p in args[idx].split(","))
+            args = args[:idx] + (mapped,) + args[idx + 1:]
         self._tr.ev(kind, t, self._map(node), *args)
 
 

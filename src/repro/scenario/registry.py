@@ -41,6 +41,12 @@ class ProtocolInfo:
       object leases (or a promise-based leader lease for leader-based
       protocols). Scenario validation rejects ``leases`` on protocols
       without it.
+    * ``reassign`` — the replica class honors ``Scenario.reassign``
+      (repro.core.reassign): online weight reassignment under churn.
+      Meaningful only for geometric-weight protocols anchored on the
+      shared slow-path leader; validation rejects the knob elsewhere
+      (paxos runs flat weights by definition, epaxos has no leader
+      anchor to fence an install on).
     """
 
     name: str
@@ -49,6 +55,7 @@ class ProtocolInfo:
     supports_sharding: bool = True
     reads: str = "linearizable"
     lease_reads: bool = False
+    reassign: bool = False
     description: str = ""
 
 
@@ -99,11 +106,11 @@ def _register_builtins() -> None:
 
     register_protocol(ProtocolInfo(
         "woc", WocReplica, leader_based=False, supports_sharding=True,
-        reads="linearizable", lease_reads=True,
+        reads="linearizable", lease_reads=True, reassign=True,
         description="dual-path weighted object consensus (the paper)"))
     register_protocol(ProtocolInfo(
         "cabinet", CabinetReplica, leader_based=True, supports_sharding=True,
-        reads="linearizable", lease_reads=True,
+        reads="linearizable", lease_reads=True, reassign=True,
         description="weighted single-leader consensus (paper baseline)"))
     register_protocol(ProtocolInfo(
         "paxos", PaxosReplica, leader_based=True, supports_sharding=True,

@@ -97,6 +97,37 @@ class Leases:
 
 
 @dataclasses.dataclass(frozen=True)
+class Reassign:
+    """Self-healing weighted quorums: online weight reassignment under
+    churn (repro.core.reassign). Default-off: with
+    ``Scenario.reassign=None`` the subsystem is never constructed, and
+    even with the knob on, fault-free runs are bit-identical to
+    knob-off runs (the monitor piggybacks on heartbeats and sends
+    nothing without confirmed fault evidence).
+
+    ``ema_ratio`` flags a peer whose latency EMA exceeds that multiple
+    of the peer median; ``stale_after_s`` flags heartbeat staleness.
+    ``confirm_ticks`` heartbeat ticks of consecutive evidence confirm a
+    suspicion (hysteresis). ``min_reports`` reporters (0 = deployment
+    count-majority, leader included) let the leader install a demoting
+    weight view; installs back off exponentially from ``backoff_s`` up
+    to ``backoff_max_s`` (anti-flap). ``epoch_fence=False`` disables
+    the slow-path-anchored install fence — only the mutation-twin test
+    should ever do that."""
+
+    enabled: bool = True
+    ema_ratio: float = 2.5
+    stale_after_s: float = 0.045
+    confirm_ticks: int = 3
+    min_reports: int = 0
+    report_interval_s: float = 0.02
+    report_ttl_s: float = 0.12
+    backoff_s: float = 0.05
+    backoff_max_s: float = 0.4
+    epoch_fence: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class Verification:
     """Post-run checking. ``capture_history`` records the client
     invoke/response history on the result (implied by any fault
@@ -127,6 +158,7 @@ class Scenario:
     verify: Verification = dataclasses.field(default_factory=Verification)
     obs: Optional[Observability] = None
     leases: Optional[Leases] = None
+    reassign: Optional[Reassign] = None
 
     # -- validation (fail fast at construction) -----------------------------
 
@@ -230,6 +262,47 @@ class Scenario:
                         "revocation and shard fencing cross group "
                         "boundaries, which the conservative window "
                         "lookahead does not model")
+        ra = self.reassign
+        if ra is not None:
+            if not isinstance(ra, Reassign):
+                raise ValueError(f"reassign must be a Reassign spec, "
+                                 f"got {ra!r}")
+            if ra.enabled:
+                if not info.reassign:
+                    raise ValueError(
+                        f"protocol {self.protocol!r} does not support "
+                        f"weight reassignment (registry capability "
+                        f"reassign=False)")
+                if not ra.ema_ratio > 1.0:
+                    raise ValueError(
+                        f"reassign.ema_ratio must be > 1, "
+                        f"got {ra.ema_ratio!r}")
+                if not ra.stale_after_s > 0:
+                    raise ValueError(
+                        f"reassign.stale_after_s must be > 0, "
+                        f"got {ra.stale_after_s!r}")
+                if not isinstance(ra.confirm_ticks, int) \
+                        or ra.confirm_ticks < 1:
+                    raise ValueError(
+                        f"reassign.confirm_ticks must be an int >= 1, "
+                        f"got {ra.confirm_ticks!r}")
+                if not isinstance(ra.min_reports, int) \
+                        or ra.min_reports < 0:
+                    raise ValueError(
+                        f"reassign.min_reports must be an int >= 0, "
+                        f"got {ra.min_reports!r}")
+                if not (ra.backoff_s > 0
+                        and ra.backoff_max_s >= ra.backoff_s):
+                    raise ValueError(
+                        f"reassign backoff must satisfy 0 < backoff_s "
+                        f"<= backoff_max_s, got {ra.backoff_s!r}/"
+                        f"{ra.backoff_max_s!r}")
+                if sh is not None and sh.workers > 1:
+                    raise ValueError(
+                        "reassign requires serial execution (workers=1):"
+                        " weight-view installs cross group boundaries, "
+                        "which the conservative window lookahead does "
+                        "not model")
         if (self.verify.check_linearizable
                 and not (self.verify.capture_history or self.faults)):
             raise ValueError(
@@ -284,6 +357,8 @@ class Scenario:
                     if self.obs is not None else None),
             "leases": (dataclasses.asdict(self.leases)
                        if self.leases is not None else None),
+            "reassign": (dataclasses.asdict(self.reassign)
+                         if self.reassign is not None else None),
         }
         return d
 
@@ -301,6 +376,7 @@ class Scenario:
         verify = d.pop("verify", None)
         obs = d.pop("obs", None)
         leases = d.pop("leases", None)
+        reassign = d.pop("reassign", None)
         known = {f.name for f in dataclasses.fields(cls)}
         bad = set(d) - known
         if bad:
@@ -321,6 +397,9 @@ class Scenario:
                  else Observability(**obs)),
             leases=(leases if isinstance(leases, (Leases, type(None)))
                     else Leases(**leases)),
+            reassign=(reassign if isinstance(reassign, (Reassign,
+                                                        type(None)))
+                      else Reassign(**reassign)),
             **d)
 
     def to_json(self, **kw) -> str:

@@ -85,6 +85,24 @@ class GroupView:
     def busy(self, node_id: int, seconds: float) -> None:
         self.root.busy(self.to_global(node_id), seconds)
 
+    def note_weight_install(self, t: float, epoch: int, ranking: list,
+                            by: int) -> None:
+        """Record a weight-view install against the root engine with the
+        ranking translated to global ids. Only group 0's installs update
+        ``root.weight_view`` (the block symbolic fault selectors resolve
+        against — see repro.faults.schedule); every group's installs land
+        in ``root.weight_installs`` for RunResult.weight_epochs."""
+        g_ranking = [self.to_global(r) for r in ranking]
+        g_by = self.to_global(by)
+        if self.group == 0:
+            self.root.note_weight_install(t, epoch, g_ranking, g_by)
+            return
+        self.root.weight_installs.append((t, epoch, tuple(g_ranking), g_by))
+        tr = getattr(self.root, "tracer", None)
+        if tr is not None:
+            tr.ev("weight_install", t, g_by, epoch,
+                  ",".join(map(str, g_ranking)))
+
 
 class GroupNodeProxy(Node):
     """Registers a locally-addressed replica in the global simulation under

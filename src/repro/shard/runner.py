@@ -83,6 +83,9 @@ class ShardedRunConfig:
     # validation restricts leases to workers=1, so the parallel engines
     # never see it.
     leases: object = None
+    # lowered weight-reassignment knob (repro.core.reassign.ReassignConfig)
+    # or None; like leases, Scenario validation restricts it to workers=1.
+    reassign: object = None
 
 
 @dataclasses.dataclass
@@ -151,6 +154,10 @@ class ShardedRunResult:
     # end. Identical serial vs parallel (the merged log is), so NOT
     # telemetry.
     commit_log_residual: int = 0
+    # weight-view install records [(t, epoch, ranking, by)] from the
+    # reassignment subsystem (repro.core.reassign); ids are global.
+    # Deterministic (and reassign is serial-only anyway), so NOT telemetry.
+    weight_epochs: list = dataclasses.field(default_factory=list)
     # client invoke/response history (repro.verify), captured on serial
     # runs when capture_history/faults is set; deterministic, so NOT a
     # telemetry field (parallel runs never capture — see faults note on
@@ -270,7 +277,8 @@ def build_group(sim, cfg: ShardedRunConfig, g: int,
     view = GroupView(sim, g, npg)
     grp = [cls(i, view, gate=gate, t_fail=t,
                group_cap=max(cfg.batch_size, 1),
-               leases=cfg.leases) for i in range(npg)]
+               leases=cfg.leases, reassign=cfg.reassign)
+           for i in range(npg)]
     for rep in grp:
         sim.add_node(GroupNodeProxy(rep, view))
         rep.start_heartbeats()
@@ -380,6 +388,7 @@ def run_sharded_config(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
         heap_peak=sim.heap_peak, workers=1,
         collapsed=sim.stats_collapsed, trace=trace)
     sim.commit_log.clear()     # growth fix: residual is on the result
+    result.weight_epochs = list(sim.weight_installs)
     if cfg.capture_history or cfg.faults:
         from repro.verify import capture_history
         result.history = capture_history(clients)

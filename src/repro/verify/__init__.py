@@ -30,15 +30,15 @@ from repro.verify.linearizability import (  # noqa: F401
     DEFAULT_MAX_STATES, SearchBudget, check_history_linearizable,
     check_object_linearizable)
 from repro.verify.recovery import (RecoveryReport,  # noqa: F401
-                                   effective_downtime, recovery_report,
-                                   throughput_timeline)
+                                   downtime_by_phase, effective_downtime,
+                                   recovery_report, throughput_timeline)
 
 __all__ = [
     "capture_history", "by_object", "HistoryEntry",
     "check_history_linearizable", "check_object_linearizable",
     "SearchBudget", "DEFAULT_MAX_STATES",
     "recovery_report", "throughput_timeline", "RecoveryReport",
-    "effective_downtime",
+    "effective_downtime", "downtime_by_phase",
     "check_state_machine_safety", "check_linearizability",
     "verify_artifacts",
 ]
@@ -51,6 +51,7 @@ def _checkable(replica, sim) -> bool:
 
 
 def verify_artifacts(art, *, check_rsm: bool = True,
+                     check_history: bool = True,
                      max_states: int = DEFAULT_MAX_STATES
                      ) -> Tuple[bool, str]:
     """Run every applicable safety check on a finished run's artifacts.
@@ -59,12 +60,16 @@ def verify_artifacts(art, *, check_rsm: bool = True,
     EPaxos, whose simplified commit broadcast applies in arrival order
     and may legitimately diverge across replicas (documented baseline
     simplification), and for artifacts without live replica state.
+    ``check_history=False`` skips the (comparatively expensive) Wing &
+    Gong search — for callers that already ran it on the same history,
+    like the scenario verification gate.
     """
     history = getattr(art.result, "history", None) or \
         capture_history(art.clients)
-    ok, why = check_history_linearizable(history, max_states)
-    if not ok:
-        return False, f"history: {why}"
+    if check_history:
+        ok, why = check_history_linearizable(history, max_states)
+        if not ok:
+            return False, f"history: {why}"
     if check_rsm:
         rsms = [r.rsm for r in art.replicas if _checkable(r, art.sim)]
         if rsms:

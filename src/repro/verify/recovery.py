@@ -25,6 +25,9 @@ class RecoveryReport:
     time_to_recover_s: float   # fault onset -> first window back above
                                # settle_frac * baseline (inf = never)
     recovered: bool
+    # weight-view installs (t, epoch) observed from the fault onset to the
+    # analysis horizon — empty unless the run's weight_epochs were passed
+    weight_installs: tuple = ()
 
 
 def throughput_timeline(history: Sequence[HistoryEntry],
@@ -76,7 +79,8 @@ def effective_downtime(history: Sequence[HistoryEntry], fault_at: float, *,
 def recovery_report(history: Sequence[HistoryEntry], fault_at: float, *,
                     window: float = 0.05, baseline_s: float = 0.25,
                     settle_frac: float = 0.7,
-                    horizon: float | None = None) -> RecoveryReport:
+                    horizon: float | None = None,
+                    weight_epochs: Sequence = ()) -> RecoveryReport:
     """Measure the throughput dip and time-to-recover around one fault.
 
     Baseline is the commit rate over ``[fault_at - baseline_s, fault_at)``;
@@ -85,12 +89,18 @@ def recovery_report(history: Sequence[HistoryEntry], fault_at: float, *,
     rate is at least ``settle_frac * baseline``; the dip is the worst
     window at or before that point (after recovery the workload may
     legitimately drain and fall to zero, which is not a dip).
+
+    ``weight_epochs`` is the run's ``RunResult.weight_epochs`` record;
+    the installs inside the analysis span land on the report so a
+    recovery claim can tie the heal to the reassignment that caused it.
     """
     resp = np.sort(np.array([h.response for h in history]))
     if not len(resp):
         return RecoveryReport(fault_at, 0.0, 0.0, 0.0, float("inf"), False)
     if horizon is None:
         horizon = float(resp[-1])
+    installs = tuple((rec[0], rec[1]) for rec in weight_epochs
+                     if fault_at <= rec[0] <= horizon)
     baseline = _baseline_rate(resp, fault_at, baseline_s)
     dip = float("inf")
     t_rec = float("inf")
@@ -110,4 +120,33 @@ def recovery_report(history: Sequence[HistoryEntry], fault_at: float, *,
     return RecoveryReport(
         fault_at=fault_at, baseline_tx_s=baseline, dip_tx_s=dip,
         dip_frac=dip / baseline if baseline > 0 else 0.0,
-        time_to_recover_s=t_rec, recovered=recovered)
+        time_to_recover_s=t_rec, recovered=recovered,
+        weight_installs=installs)
+
+
+def downtime_by_phase(history: Sequence[HistoryEntry], fault_at: float,
+                      weight_epochs: Sequence, *,
+                      horizon: float = 0.5,
+                      baseline_s: float = 0.25) -> tuple:
+    """Split :func:`effective_downtime` at the first weight-view install
+    after the fault: ``(detect_s, residual_s)`` — deficit paid while the
+    fault ran on the old weight view (detection + confirmation latency)
+    vs deficit remaining after the reassignment landed. With no install
+    in the span, the whole deficit is detection."""
+    resp = np.sort(np.array([h.response for h in history]))
+    if not len(resp):
+        return (float(horizon), 0.0)
+    baseline = _baseline_rate(resp, fault_at, baseline_s)
+    if baseline <= 0:
+        return (0.0, 0.0)
+    end = min(fault_at + horizon, float(resp[-1]))
+    first = next((rec[0] for rec in weight_epochs
+                  if rec[0] >= fault_at), None)
+    split = end if first is None else min(first, end)
+
+    def deficit(a: float, b: float) -> float:
+        span = max(b - a, 0.0)
+        actual = float(np.searchsorted(resp, b) - np.searchsorted(resp, a))
+        return max(0.0, (baseline * span - actual) / baseline)
+
+    return (deficit(fault_at, split), deficit(split, end))

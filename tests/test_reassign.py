@@ -1,0 +1,335 @@
+"""Online weight reassignment under churn (repro.core.reassign).
+
+Four layers of coverage:
+
+  * inertness — ``Scenario.reassign=None``, ``Reassign(enabled=False)``
+    and ``Reassign()`` on a fault-free run all build the exact same op
+    stream: the monitor piggybacks on the heartbeat timer and sends
+    nothing without fault evidence, so the knob is free until a fault
+    makes it earn its keep;
+  * behavior — degrading the top-weight replica triggers an epoch-
+    stamped demotion install, fast-path throughput recovers to >= 80%
+    of the pre-fault rate (vs the depressed floor with the knob off),
+    and the view restores to identity after the heal; symbolic fault
+    selectors resolve against the live view; flapping is bounded by the
+    exponential install backoff;
+  * telemetry — installs surface on ``RunResult.weight_epochs``, the
+    recovery report, the downtime phase split, and the critical-path
+    ``reassign`` bucket;
+  * safety — reassignment histories and replica apply orders stay
+    linearizable across the fault matrix (x leases, x protocols,
+    leader crash mid-fence), and the mutation twin with the epoch
+    fence knocked out MUST fail the checker: the dual-leader window
+    the fence closes is real, so a silently broken fence cannot pass
+    this suite.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.faults import Crash, Recover, degrade_top, flap, leader_crash, \
+    sym_partition
+from repro.obs.critical_path import analyze_events
+from repro.scenario import (Leases, Observability, Reassign, Scenario,
+                            Verification, ZipfWorkload, protocol_info,
+                            protocols_with, run_scenario)
+from repro.verify import (downtime_by_phase, recovery_report,
+                          throughput_timeline)
+
+REASSIGN_PROTOS = ("cabinet", "woc")
+
+
+def _sc(**kw):
+    kw.setdefault("n_replicas", 5)
+    kw.setdefault("n_clients", 4)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("seed", 3)
+    return Scenario(**kw)
+
+
+def _op_stream(art):
+    return sorted((o.op_id, o.obj, o.kind, o.submit_time, o.commit_time,
+                   o.path, o.read_result)
+                  for c in art.clients for o in c.ops)
+
+
+# ---------------------------------------------------------------------------
+# registry gating + spec validation
+# ---------------------------------------------------------------------------
+
+def test_registry_reassign_capability():
+    assert protocols_with(reassign=True) == sorted(REASSIGN_PROTOS)
+    assert not protocol_info("paxos").reassign      # flat by definition
+    assert not protocol_info("epaxos").reassign     # no leader anchor
+
+
+@pytest.mark.parametrize("proto", ["paxos", "epaxos"])
+def test_scenario_rejects_reassign_on_unsupporting_protocol(proto):
+    with pytest.raises(ValueError, match="reassign"):
+        _sc(protocol=proto, total_ops=100, reassign=Reassign())
+
+
+def test_reassign_spec_round_trips():
+    sc = _sc(protocol="woc", total_ops=100,
+             reassign=Reassign(ema_ratio=3.0, backoff_s=0.1,
+                               epoch_fence=False))
+    back = Scenario.from_dict(sc.to_dict())
+    assert back.reassign == sc.reassign
+    assert back.reassign.ema_ratio == 3.0
+    assert back.reassign.epoch_fence is False
+
+
+# ---------------------------------------------------------------------------
+# inertness: the knob is free on fault-free runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", REASSIGN_PROTOS)
+def test_reassign_fault_free_is_bit_identical(proto):
+    """Three spellings, one run: no reassign knob, an explicitly
+    disabled knob (no manager constructed), and an ENABLED knob on a
+    fault-free run — the monitor piggybacks on the heartbeat timer and
+    never finds evidence, so every op commits at the exact same
+    simulated instant via the exact same path."""
+    wl = ZipfWorkload(n_objects=64, theta=0.0, reads_fraction=0.5)
+    base = run_scenario(_sc(protocol=proto, total_ops=2000, workload=wl))
+    off = run_scenario(_sc(protocol=proto, total_ops=2000, workload=wl,
+                           reassign=Reassign(enabled=False)))
+    on = run_scenario(_sc(protocol=proto, total_ops=2000, workload=wl,
+                          reassign=Reassign()))
+    assert all(r.reassign_mgr is None for r in off.replicas)
+    assert all(r.reassign_mgr is not None for r in on.replicas)
+    assert _op_stream(base) == _op_stream(off) == _op_stream(on)
+    assert on.result.weight_epochs == []
+    assert on.sim.weight_view == (0, None)
+    # no evidence -> not a single reassignment message on the wire
+    assert sum(r.reassign_mgr.installs for r in on.replicas) == 0
+    assert sum(r.reassign_mgr.suspect_reports for r in on.replicas) == 0
+
+
+# ---------------------------------------------------------------------------
+# behavior: demotion, recovery, restore (shared flagship runs)
+# ---------------------------------------------------------------------------
+
+_FLAGSHIP = dict(protocol="woc", total_ops=20000,
+                 faults=degrade_top(at=0.1, heal_at=0.4, factor=8.0))
+
+
+@pytest.fixture(scope="module")
+def degrade_on():
+    return run_scenario(_sc(reassign=Reassign(),
+                            obs=Observability(trace=True, sample_every=1),
+                            verify=Verification(check_linearizable=True),
+                            **_FLAGSHIP))
+
+
+@pytest.fixture(scope="module")
+def degrade_off():
+    return run_scenario(_sc(**_FLAGSHIP))
+
+
+def test_degrade_top_demotes_then_restores(degrade_on):
+    """The degraded top-weight replica is demoted to the ranking tail
+    in epoch 1; after the heal the view converges back to identity."""
+    we = degrade_on.result.weight_epochs
+    assert len(we) >= 2
+    t0, epoch0, ranking0, by0 = we[0]
+    assert 0.1 < t0 < 0.25          # confirmed within the fault window
+    assert epoch0 == 1
+    assert by0 == 0                 # installed by the then-leader
+    assert ranking0[0] == 1 and ranking0[-1] == 0
+    # heal at 0.4: the final view is the identity restore
+    assert we[-1][2] == (0, 1, 2, 3, 4)
+    assert degrade_on.sim.weight_view[0] == len(we)
+
+
+def test_fast_path_recovers_with_reassignment(degrade_on, degrade_off):
+    """The acceptance claim: with reassignment the commit rate late in
+    the fault window recovers to >= 80% of the pre-fault rate; with the
+    knob off the degraded top-weight replica pins every quorum to its
+    inflated delays and throughput stays on the depressed floor."""
+    def rates(art):
+        tl = dict(throughput_timeline(art.result.history, window=0.05))
+        return tl[0.05], max(tl[0.25], tl[0.30])
+    pre_on, late_on = rates(degrade_on)
+    pre_off, late_off = rates(degrade_off)
+    assert pre_on == pre_off            # fault-free prefix identical
+    assert late_on >= 0.8 * pre_on
+    assert late_off < 0.7 * pre_off
+
+
+def test_reassignment_telemetry(degrade_on):
+    """Installs land on every observability surface: the run result,
+    the recovery report, the downtime phase split, the trace, and the
+    critical-path ``reassign`` bucket."""
+    r = degrade_on.result
+    assert r.weight_epochs == degrade_on.sim.weight_installs
+    rep = recovery_report(r.history, 0.1, weight_epochs=r.weight_epochs)
+    assert rep.recovered
+    assert rep.weight_installs[0][1] == 1       # (t, epoch) of the demote
+    detect_s, residual_s = downtime_by_phase(r.history, 0.1,
+                                             r.weight_epochs)
+    assert detect_s > 0.0           # confirmation latency is never free
+    assert residual_s >= 0.0
+    kinds = {e[1] for e in r.trace}
+    assert {"weight_suspect", "weight_install", "weight_adopt"} <= kinds
+    cp = analyze_events(r.trace)
+    assert cp.slow.reassign_s > 0.0     # fence drain is attributed
+    assert "reassign_s" in cp.slow.to_dict()
+    assert "reassign_frac" in cp.slow.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# symbolic selectors resolve against the live weight view
+# ---------------------------------------------------------------------------
+
+def test_crash_selector_follows_reassignment():
+    """After the demotion install, ``Crash("top_weight")`` targets the
+    node the live view ranks first — not the statically top-weighted
+    replica 0 it resolves to with no view installed."""
+    faults = degrade_top(at=0.1, heal_at=0.6, factor=8.0) + \
+        (Crash(at=0.3, node="top_weight"),)
+    on = run_scenario(_sc(total_ops=8000, reassign=Reassign(),
+                          protocol="woc", faults=faults))
+    assert on.result.weight_epochs          # install happened before 0.3
+    assert sorted(on.sim.crashed) == [1]
+    off = run_scenario(_sc(total_ops=8000, protocol="woc", faults=faults))
+    assert sorted(off.sim.crashed) == [0]
+
+
+def test_degrade_heal_targets_the_degraded_node():
+    """The preset's symbolic heal must heal the node the onset degraded
+    even though the view re-ranked "top_weight" in between — otherwise
+    the degraded replica stays degraded forever and the view never
+    legitimately restores."""
+    art = run_scenario(_sc(reassign=Reassign(), **_FLAGSHIP))
+    assert art.sim._degrade.get(0, 1.0) == 1.0
+    assert art.result.weight_epochs[-1][2] == (0, 1, 2, 3, 4)
+
+
+# ---------------------------------------------------------------------------
+# flap: exponential backoff bounds view churn
+# ---------------------------------------------------------------------------
+
+def test_flap_preset_shape():
+    ev = flap(node=2, at=0.1, period=0.1, count=3, factor=4.0)
+    assert len(ev) == 6
+    assert all(e.node == 2 for e in ev)
+    assert [e.factor for e in ev] == [4.0, 1.0] * 3
+
+
+def test_flap_installs_bounded_by_backoff():
+    """8 degrade/heal cycles would naively drive 16 view installs (one
+    demote + one restore per cycle); the doubling install backoff holds
+    the deterministic run to 8."""
+    art = run_scenario(_sc(protocol="woc", total_ops=20000,
+                           reassign=Reassign(),
+                           faults=flap(at=0.05, period=0.12, count=8)))
+    we = art.result.weight_epochs
+    assert 2 <= len(we) <= 8 < 2 * 8
+    # the backoff stretches: the last inter-install gap is larger than
+    # the first (churn slows down instead of tracking every cycle)
+    gaps = [b[0] - a[0] for a, b in zip(we, we[1:])]
+    assert max(gaps[len(gaps) // 2:]) > gaps[0]
+
+
+# ---------------------------------------------------------------------------
+# safety matrix: reassignment x leases x faults stays linearizable
+# ---------------------------------------------------------------------------
+
+_MATRIX_FAULTS = {
+    "leader_crash": leader_crash(at=0.12, recover_at=0.45),
+    "sym_partition": sym_partition(at=0.12, heal_at=0.4, side=(1,)),
+    "degrade_top": degrade_top(at=0.1, heal_at=0.5),
+}
+
+
+@pytest.mark.parametrize("proto", REASSIGN_PROTOS)
+@pytest.mark.parametrize("fault", sorted(_MATRIX_FAULTS))
+@pytest.mark.parametrize("leased", [False, True])
+def test_reassignment_linearizable_under_faults(proto, fault, leased):
+    """The strengthened scenario gate (history + one total apply order
+    across live replicas) passes the whole matrix."""
+    kw = dict(protocol=proto, total_ops=1500,
+              faults=_MATRIX_FAULTS[fault], reassign=Reassign(),
+              workload=ZipfWorkload(n_objects=32, theta=0.0,
+                                    reads_fraction=0.9),
+              verify=Verification(capture_history=True,
+                                  check_linearizable=True))
+    if leased:
+        kw["leases"] = Leases(grant_after_reads=1)
+    art = run_scenario(_sc(**kw))
+    assert art.result.committed_ops == 1500
+
+
+def test_leader_crash_mid_fence_stays_linearizable():
+    """Crash the installing (just-demoted) leader right inside the fence
+    window of the first install: the handoff of its uncommitted slow
+    instance plus the crash recovery must still yield one total order."""
+    faults = degrade_top(at=0.1, heal_at=0.5, factor=8.0) + \
+        (Crash(at=0.155, node=0), Recover(at=0.4, node=0))
+    art = run_scenario(_sc(
+        protocol="woc", total_ops=12000, reassign=Reassign(),
+        faults=faults, verify=Verification(check_linearizable=True)))
+    assert art.result.committed_ops == 12000
+    assert art.result.weight_epochs
+
+
+# ---------------------------------------------------------------------------
+# the mutation twin: no fence, no linearizability
+# ---------------------------------------------------------------------------
+
+def _twin_sc(fence: bool):
+    """Degrade the top-weight leader so the demotion install lands at
+    t~0.14, then cut the network at exactly that instant so the old
+    leader keeps only node 2 — together a weighted majority under the
+    pre-install view ({0,2} = 20 > 15.5) but a count-minority. With the
+    fence off, the demoted installer neither hands off its uncommitted
+    slow instance nor re-derives leadership: the instance commits on
+    its side under the propose-time weight snapshot while the count-
+    majority side elects a fresh leader under the new view and
+    serializes conflicting rounds — the two quorums never intersect,
+    and a write acked on the minority side vanishes from the agreed
+    order (the checker reports it as never applied). The fence closes
+    exactly this window, so the same cut with ``epoch_fence=True`` must
+    pass. Robust across seeds 1-5 at this timing."""
+    return _sc(
+        protocol="woc", total_ops=20000,
+        faults=degrade_top(at=0.1, heal_at=0.5, factor=8.0)
+               + sym_partition(at=0.14, heal_at=0.35, side=(0, 2)),
+        reassign=Reassign(epoch_fence=fence, backoff_s=0.01,
+                          backoff_max_s=0.02, confirm_ticks=2,
+                          stale_after_s=0.03),
+        verify=Verification(check_linearizable=True))
+
+
+def test_epoch_fence_keeps_the_run_linearizable():
+    art = run_scenario(_twin_sc(fence=True))
+    assert art.result.committed_ops == 20000
+    assert len(art.result.weight_epochs) >= 1
+
+
+def test_broken_epoch_fence_fails_the_checker():
+    """Mutation twin: if this ever starts passing with the fence
+    disabled, the scenario has stopped exercising the dual-leader
+    window and needs re-tuning."""
+    with pytest.raises(AssertionError, match="not linearizable"):
+        run_scenario(_twin_sc(fence=False))
+
+
+def test_lease_answered_read_survives_late_consensus_commit():
+    """Regression: a read served locally off a lease while an older
+    consensus instance for the same op was stuck behind a partition
+    must keep its lease-time answer when that instance finally commits
+    — re-sampling the store at apply would hand the client a value
+    written after the read's linearization point (a future read). The
+    commit stamp was always first-wins; this pins read_result too."""
+    art = run_scenario(_sc(
+        protocol="woc", n_clients=8, total_ops=12000, seed=5,
+        faults=flap(at=0.05, period=0.12, count=8, factor=8.0)
+               + sym_partition(at=0.15, heal_at=0.4, side=(1,)),
+        workload=ZipfWorkload(n_objects=8, theta=0.0, reads_fraction=0.8),
+        leases=Leases(grant_after_reads=1),
+        reassign=Reassign(backoff_s=0.01, backoff_max_s=0.02),
+        verify=Verification(check_linearizable=True)))
+    assert art.result.read_local_frac > 0    # leases actually served
