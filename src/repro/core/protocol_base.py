@@ -110,6 +110,22 @@ class ObjectWeightTable:
     def threshold_for(self, obj: int) -> float:
         return self.current_threshold()            # T^O = sum(W^O)/2
 
+    def shared_weights(self) -> np.ndarray:
+        """Weights under the SHARED election ranking: the epoch-stamped
+        installed view when present (``view_weights`` is then exactly
+        ``base[rank_of]``, cached), else the static deployment ranking
+        (replica id == rank). Unlike ``node_weights`` this never consults
+        the private latency EMA: every node zeroes its own EMA entry and
+        so ranks ITSELF top-weight in its private view, which would let
+        two partition sides both believe they hold the weighted
+        majority. The leadership lease and the isolation detector must
+        evaluate one vector that is identical at every replica."""
+        if self.flat:
+            return self._flat_w
+        if self.rank_of is not None:
+            return self.view_weights()
+        return self.base
+
     def set_rank_override(self, ranking) -> None:
         """Install (or with ``None`` clear) an epoch-stamped ranking:
         ``ranking[0]`` gets the top geometric weight. Per-object EMAs
@@ -324,27 +340,49 @@ class BaseReplica(Node):
                 if not candidate:
                     continue
                 # higher-ranked replicas are all dead. Claim leadership
-                # only while a count-majority of the deployment is
-                # heartbeat-fresh: a cut-off replica ranks ITSELF
-                # top-weight in its private EMA view, so without this
-                # lease two partition sides can both cross their
-                # (differently-weighted) slow thresholds — the
-                # split-brain the fault suite reproduces. Weighted
-                # quorum speed is untouched: commits still wait only for
-                # weight > T^N, the lease just pins who may drive them.
-                fresh = [last_hb[p] for p in range(n)
+                # only while the heartbeat-fresh set (incl. self) is BOTH
+                # a count-majority of the deployment AND a weighted
+                # majority under the shared election ranking. The count
+                # half is the classic anti-split-brain lease; the
+                # weighted half closes the count-majority/weighted-
+                # minority hole: without it, a partition that strands
+                # the weighted majority (say {0, 2} of five) lets the
+                # other side elect by count while fast-path commits land
+                # under the old leader's stale lease on the weighted
+                # side — and whichever side later resyncs loses them.
+                # Weighted quorum speed is untouched: commits still wait
+                # only for weight > T^N, the lease just pins who may
+                # drive them.
+                fresh = [(last_hb[p], p) for p in range(n)
                          if p != me and now - last_hb[p] <= hb_to]
                 need = n // 2          # peers needed besides self
-                if len(fresh) >= need:
-                    if need:
-                        fresh.sort(reverse=True)
-                        until = fresh[need - 1] + hb_to  # lease lapse
-                    else:
-                        until = float("inf")
+                if len(fresh) < need:
+                    continue
+                if not need:
                     self._leader_memo = me
-                    self._leader_until = until
+                    self._leader_until = float("inf")
                     return me
-                continue
+                fresh.sort(reverse=True)
+                until = fresh[need - 1][0] + hb_to   # count-lease lapse
+                sw = self.obj_weights.shared_weights()
+                thr = self.node_threshold()
+                acc = float(sw[me])
+                w_until = None
+                # accumulate freshest-first: the subset that strictly
+                # crosses T^N with the latest-lapsing support maximizes
+                # the weighted-lease window; the tipping peer's detector
+                # window is when weighted support could first fall short
+                for t_p, p in fresh:
+                    acc += float(sw[p])
+                    if acc > thr:
+                        w_until = t_p + hb_to
+                        break
+                if w_until is None:
+                    continue    # count majority, weighted minority:
+                                # step aside rather than split the paths
+                self._leader_memo = me
+                self._leader_until = min(until, w_until)
+                return me
             if now - last_hb[r] <= hb_to:
                 # valid until this leader's detector window lapses, or we
                 # become a candidate ourselves at _lead_after (only
@@ -367,6 +405,16 @@ class BaseReplica(Node):
     def start_heartbeats(self) -> None:
         if not self._hb_armed:
             self._hb_armed = True
+            now = self.sim.now
+            if now:
+                # served transport: the clock is wall time since the
+                # cluster epoch and already exceeds the detector window
+                # when heartbeats start, so seed the failure detector as
+                # if every peer just beat — one HB_TIMEOUT of boot grace
+                # before anyone can look stale. In the simulator now is
+                # exactly 0.0 here and last_hb is already all-zero, so
+                # this is a no-op (bit-identity preserved).
+                self.last_hb = [now] * self.sim.n
             self._hb_timer = self.set_timer(self.HB_INTERVAL, "hb")
 
     # -- partition-heal detection ----------------------------------------------
@@ -375,13 +423,20 @@ class BaseReplica(Node):
     # replica never "recovers" — the network just comes back. While it was
     # cut off it missed commit broadcasts for good (nothing retransmits old
     # commits), so its log has holes and serving reads/sync from it would
-    # leak them. Detection: if a majority of the deployment is
-    # heartbeat-stale, we are on the losing side of a partition (or the
-    # cluster is mostly down — indistinguishable, and the response is the
-    # same); once connectivity returns, rejoin through the crash-recovery
-    # state transfer. Fault-free and crash-only runs never trip this: the
-    # scan costs no simulated time and a single crashed peer is far below
-    # the majority threshold.
+    # leak them. Detection: if the heartbeat-fresh set (incl. self) is a
+    # weighted MINORITY under the shared election ranking, we are on the
+    # losing side of a partition (or the cluster is mostly down —
+    # indistinguishable, and the response is the same); once connectivity
+    # returns, rejoin through the crash-recovery state transfer. The rule
+    # is weighted, not count-based, and it mirrors the leadership lease:
+    # the side that can hold the lease (and therefore commit) is exactly
+    # the side that must NOT resync-wipe itself at heal, and the side
+    # that cannot is exactly the side whose log grows holes. A count rule
+    # here wiped the weighted-majority side of a count-minority partition
+    # — losing its committed fast-path ops (the CHANGES.md baseline
+    # hole). Fault-free and crash-only runs never trip this: the scan
+    # costs no simulated time, and the geometric invariant I2 guarantees
+    # the surviving n-t replicas strictly cross half.
 
     def _check_isolation(self, now: float) -> None:
         if self.recovering:
@@ -392,11 +447,12 @@ class BaseReplica(Node):
         cutoff = now - self.HB_TIMEOUT
         last_hb = self.last_hb
         me = self.node_id
-        stale = 0
+        sw = self.obj_weights.shared_weights()
+        acc = float(sw[me])
         for r in range(n):
-            if r != me and last_hb[r] < cutoff:
-                stale += 1
-        if (n - stale) * 2 <= n:      # self + fresh peers is no majority
+            if r != me and last_hb[r] >= cutoff:
+                acc += float(sw[r])
+        if acc <= self.node_threshold():   # fresh set: weighted minority
             self._isolated = True
         elif self._isolated:
             # connectivity is back after an isolation episode: pull a
@@ -671,6 +727,7 @@ class BaseReplica(Node):
         obj_buffer = self._obj_buffer
         in_flight = self.in_flight
         last_applied = self.last_applied
+        read_results = self.sim.read_results   # transport only (sim: None)
         is_slow = path == "slow"
         applied_now = []
         for op in ops:
@@ -706,6 +763,8 @@ class BaseReplica(Node):
                 log.append((obj, op_id, None))
                 if op.path != "local":  # lease-answered read keeps its answer
                     op.read_result = store.get(obj)
+                if read_results is not None:
+                    read_results[op_id] = op.read_result
             fl = in_flight.get(obj)
             if fl is not None:
                 fl.pop(op_id, None)
@@ -722,6 +781,10 @@ class BaseReplica(Node):
     def _apply_now(self, op, now: float, path: str) -> None:
         self.sim.busy(self.node_id, self._apply_cost)
         self.rsm.apply(op)
+        if op.kind == "r":
+            rr = self.sim.read_results         # transport only (sim: None)
+            if rr is not None:
+                rr[op.op_id] = op.read_result
         self.clear_inflight(op.obj, op.op_id)
         if path == "slow":
             self.last_slow[op.obj] = op.op_id

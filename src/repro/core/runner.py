@@ -10,13 +10,16 @@ experiments as ``run(RunConfig(...))``.
 
 Protocol lookup lives in :mod:`repro.scenario.registry` (capability
 metadata instead of string sets). ``PROTOCOLS`` and ``LEADER_BASED``
-below are import-compatible snapshots for old call sites; consult the
-registry in anything new.
+below are import-compatible *live views* over the registry for old call
+sites (late-registered protocols appear; every access warns); consult
+the registry in anything new.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from collections.abc import Mapping, Set
 from typing import List, Optional, Sequence
 
 from repro.core.protocol_base import BaseReplica
@@ -25,10 +28,62 @@ from repro.core.simulator import (Client, CostModel, RunResult, Simulation,
 from repro.scenario.registry import (protocol_class, protocol_info,
                                      protocol_names, protocols_with)
 
-# deprecated compatibility snapshots of the registry (taken at import
-# time — protocols registered later do NOT appear; use the registry)
-PROTOCOLS = {name: protocol_class(name) for name in protocol_names()}
-LEADER_BASED = set(protocols_with(leader_based=True))
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.core.runner.{name} is deprecated; consult "
+        f"repro.scenario.registry (protocol_class / protocol_info / "
+        f"protocols_with) instead", DeprecationWarning, stacklevel=4)
+
+
+class _LiveProtocols(Mapping):
+    """Deprecated compatibility surface for the old ``PROTOCOLS`` dict.
+
+    A live view over :mod:`repro.scenario.registry` — unlike the
+    import-time snapshot it replaces, protocols registered after this
+    module imports DO appear. Every access emits a DeprecationWarning."""
+
+    def __getitem__(self, name):
+        _deprecated("PROTOCOLS")
+        return protocol_class(name)
+
+    def __iter__(self):
+        _deprecated("PROTOCOLS")
+        return iter(protocol_names())
+
+    def __len__(self):
+        return len(protocol_names())
+
+    def __repr__(self):
+        return (f"<deprecated live view of the protocol registry: "
+                f"{protocol_names()}>")
+
+
+class _LiveLeaderBased(Set):
+    """Deprecated compatibility surface for the old ``LEADER_BASED``
+    string set — a live registry view (see :class:`_LiveProtocols`)."""
+
+    def _members(self):
+        return protocols_with(leader_based=True)
+
+    def __contains__(self, name):
+        _deprecated("LEADER_BASED")
+        return name in self._members()
+
+    def __iter__(self):
+        _deprecated("LEADER_BASED")
+        return iter(self._members())
+
+    def __len__(self):
+        return len(self._members())
+
+    def __repr__(self):
+        return (f"<deprecated live view of leader-based protocols: "
+                f"{self._members()}>")
+
+
+PROTOCOLS = _LiveProtocols()
+LEADER_BASED = _LiveLeaderBased()
 
 
 def client_target_fn(protocol: str, ci: int, n: int, offset: int = 0):

@@ -332,6 +332,13 @@ class EventEngine:
         # Cleared by the runners once metrics are assembled (unbounded
         # growth fix); the residual count is surfaced as a metric.
         self.commit_log: Dict[int, tuple] = {}
+        # read-result capture hook (repro.transport): None in simulation —
+        # clients share Op objects by reference, so a read's result is
+        # visible the moment a replica stamps it. Over a real transport
+        # ops are wire copies; the serving context sets this to a dict
+        # and the apply sites record ``op_id -> read_result`` so replies
+        # can carry the value back (see NetContext._enrich_reply).
+        self.read_results: Optional[Dict[int, object]] = None
         # observability (repro.obs): host-side span recorder, attached by
         # the runners when the Observability spec enables tracing. Every
         # instrumentation site is guarded by an ``is not None`` check and

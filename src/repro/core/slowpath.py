@@ -154,7 +154,17 @@ class SlowPathMixin:
             # backoff (or the client's retry) re-drives it elsewhere
             return
         if not self.is_leader(now):                # stale leader view: bounce
-            self.send(self.current_leader(now), "slow_forward", msg.payload,
+            leader = self.current_leader(now)
+            if leader == msg.src:
+                # mutual disagreement: the sender believes WE lead, we
+                # believe THEY do (a partition whose sides can each see
+                # the other's heartbeats but neither can claim the lease
+                # leaves exactly this pairwise view). Bouncing would
+                # ping-pong the batch at network rate until the heal —
+                # drop instead; the sender's retransmit backoff (or the
+                # client's retry) re-drives it once views converge.
+                return
+            self.send(leader, "slow_forward", msg.payload,
                       size_ops=len(msg.payload["ops"]))
             return
         self._enqueue_slow(msg.payload["ops"], now)

@@ -37,6 +37,7 @@ class GroupView:
         self.costs = root.costs
         self.seed = root.seed
         self.commit_log = root.commit_log   # shared engine-wide stamp log
+        self.read_results = root.read_results   # transport hook (sim: None)
         # protocol code under a view speaks local replica ids — wrap the
         # root tracer (when tracing is on) so recorded events carry global
         # ids, same namespace as the flat engine's trace. Captured at

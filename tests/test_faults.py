@@ -244,6 +244,26 @@ def test_minority_island_cannot_commit():
     assert ok, why
 
 
+def test_weighted_majority_count_minority_island_safe():
+    """Regression for the leadership hole: cut {0, 2} away — a side
+    whose static geometric weights (13.80 + 3.72 = 17.52 > 13.80 =
+    half) form a weighted majority while being a 2-of-5 count minority.
+    A leader lease self-claim backed by weighted support alone lets
+    that island serialize slow instances the count-majority side never
+    intersects, so a write acked there vanishes from the agreed order.
+    The claim must hold BOTH the count lease and a shared-weighted
+    majority; with no reassignment manager running (static weights,
+    ``reassign=None``) the run must still be linearizable — the
+    scenario's verification gate raises if it is not."""
+    from repro.scenario import Scenario, Verification, run_scenario
+    art = run_scenario(Scenario(
+        protocol="woc", n_replicas=5, n_clients=4, batch_size=4,
+        seed=3, total_ops=20000,
+        faults=sym_partition(at=0.14, heal_at=0.35, side=(0, 2)),
+        verify=Verification(check_linearizable=True)))
+    assert art.result.committed_ops == 20000
+
+
 # ---------------------------------------------------------------------------
 # Acceptance scenarios + recovery telemetry
 # ---------------------------------------------------------------------------

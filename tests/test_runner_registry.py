@@ -1,0 +1,74 @@
+"""The deprecated ``PROTOCOLS``/``LEADER_BASED`` compat surfaces in
+repro.core.runner must be LIVE views over the protocol registry.
+
+The originals were dict/set snapshots taken when runner.py imported, so
+a protocol registered afterwards (plugin modules, test fixtures) never
+appeared in them — code consulting the compat surface and code
+consulting the registry disagreed about what protocols exist. These
+tests pin the live-view behavior and the DeprecationWarning contract.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+from repro.core.runner import LEADER_BASED, PROTOCOLS
+from repro.core.woc import WocReplica
+from repro.scenario import ProtocolInfo, register_protocol
+
+
+def _with_late_protocol(name: str, **caps):
+    info = ProtocolInfo(name, WocReplica, **caps)
+    register_protocol(info)
+    return info
+
+
+def _forget(name: str) -> None:
+    from repro.scenario.registry import _REGISTRY
+    _REGISTRY.pop(name, None)
+
+
+def test_late_registration_appears_in_protocols():
+    assert "late_proto" not in set(PROTOCOLS)
+    _with_late_protocol("late_proto")
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert "late_proto" in set(PROTOCOLS)
+            assert PROTOCOLS["late_proto"] is WocReplica
+    finally:
+        _forget("late_proto")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert "late_proto" not in set(PROTOCOLS)
+
+
+def test_late_registration_appears_in_leader_based():
+    _with_late_protocol("late_leader", leader_based=True)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert "late_leader" in LEADER_BASED
+    finally:
+        _forget("late_leader")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert "late_leader" not in LEADER_BASED
+
+
+def test_compat_surfaces_warn_on_access():
+    with pytest.warns(DeprecationWarning, match="PROTOCOLS is deprecated"):
+        PROTOCOLS["woc"]
+    with pytest.warns(DeprecationWarning, match="LEADER_BASED is deprecated"):
+        "cabinet" in LEADER_BASED
+
+
+def test_compat_surfaces_behave_like_the_originals():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert set(PROTOCOLS) >= {"woc", "cabinet", "paxos", "epaxos"}
+        assert LEADER_BASED == {"cabinet", "paxos"}
+        assert len(PROTOCOLS) == len(set(PROTOCOLS))
+        assert PROTOCOLS.get("nope") is None
