@@ -23,9 +23,10 @@ import time
 from benchmarks import (bench_batch_size, bench_client_scaling,
                         bench_conflict_rate, bench_engine,
                         bench_fault_recovery, bench_grad_quorum,
-                        bench_parallel_shard, bench_quorum_kernel,
-                        bench_server_scaling, bench_shard_scaling,
-                        bench_weights, bench_workloads)
+                        bench_parallel_shard, bench_payload,
+                        bench_quorum_kernel, bench_server_scaling,
+                        bench_shard_scaling, bench_weights,
+                        bench_workloads)
 
 SUITES = [
     ("engine", bench_engine),
@@ -39,6 +40,7 @@ SUITES = [
     ("workloads", bench_workloads),
     ("shard_scaling", bench_shard_scaling),
     ("parallel", bench_parallel_shard),
+    ("payload", bench_payload),
     ("faults", bench_fault_recovery),
 ]
 

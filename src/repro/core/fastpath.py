@@ -63,6 +63,7 @@ class FastBatch:
     deps: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
     replied: set = dataclasses.field(default_factory=set)
     lease_waits: List[int] = dataclasses.field(default_factory=list)
+    coding_waits: List[int] = dataclasses.field(default_factory=list)
 
 
 class FastPathMixin:
@@ -118,8 +119,21 @@ class FastPathMixin:
                 if sampled(op.op_id):
                     tr.ev("fast_propose", now, self.node_id,
                           fb.batch_id, op.op_id)
-        self.broadcast(self._others, "fast_propose",
-                       {"fb": fb.batch_id, "ops": ops}, size_ops=B)
+        cm = self.coding_mgr
+        if cm is not None and cm.plan_batch(ops, now):
+            # striped batch: per-destination sends so each assignee gets
+            # its distinct shard (full-copy ops ride along at full size)
+            for dst in self._others:
+                stripes, nb = cm.stripe_payload_for(ops, dst)
+                payload = {"fb": fb.batch_id, "ops": ops}
+                if stripes:
+                    payload["stripes"] = stripes
+                self.send(dst, "fast_propose", payload, size_ops=B,
+                          size_bytes=nb)
+        else:
+            self.broadcast(self._others, "fast_propose",
+                           {"fb": fb.batch_id, "ops": ops}, size_ops=B,
+                           size_bytes=sum(op.size for op in ops))
         # timeout scales with batch size: large batches legitimately spend
         # longer in per-op parse/apply queues before replies return
         fb.timer = self.set_timer(self.sim.costs.timeout + 50e-6 * B,
@@ -133,6 +147,14 @@ class FastPathMixin:
             return
         src = msg.src
         fb.replied.add(src)
+        if fb.coding_waits:
+            # a decided striped write is gated on its reconstructable
+            # set: this reply proves the replier durably holds the
+            # shards the propose assigned it
+            cmgr = self.coding_mgr
+            for k in fb.coding_waits:
+                cmgr.wait_ack(k, src, now)
+            self._fast_gc(fb)
         if fb.lease_waits:
             # a decided write in this batch is gated on a lease: this
             # reply doubles as the replier's revocation ack
@@ -211,6 +233,24 @@ class FastPathMixin:
             deps = {op.op_id: fb.deps.get(op.op_id, []) for op in committed}
         else:
             deps = {}
+        cm = self.coding_mgr
+        if cm is not None:
+            key = cm.gate_commit(
+                committed, now,
+                lambda t, ops=committed, d=deps, b=fb:
+                    self._fast_coding_gated(b, ops, d, t),
+                fb.replied)
+            if key is not None:
+                # a striped write crossed its weighted threshold before
+                # its reconstructable set is durable: the decision
+                # stands but the stamp waits for enough distinct shard
+                # acks (late round acks / stripe_push acks feed it)
+                fb.coding_waits.append(key)
+                return
+        self._fast_lease_gated(fb, committed, deps, now)
+
+    def _fast_lease_gated(self, fb: FastBatch, committed: List[Op],
+                          deps: dict, now: float) -> None:
         lm = self.lease_mgr
         if lm is not None:
             key = lm.gate_commit(
@@ -231,9 +271,16 @@ class FastPathMixin:
                        now: float) -> None:
         for op in committed:
             op.path = op.path or "fast"
+        cm = self.coding_mgr
+        mk = cm.commit_marker(committed) if cm is not None else None
+        if mk:
+            # marker before apply: the local apply below GC's the plan
+            cm.note_striped_commit(committed, mk, now)
         self.apply_commit_batch(committed, deps, now, "fast")
-        self.broadcast(self._others, "fast_commit",
-                       {"ops": committed, "deps": deps},
+        payload = {"ops": committed, "deps": deps}
+        if mk:
+            payload["striped"] = mk
+        self.broadcast(self._others, "fast_commit", payload,
                        size_ops=len(committed))
         self.flush_credits()
 
@@ -241,6 +288,11 @@ class FastPathMixin:
                              deps: dict, now: float) -> None:
         self._fast_finalize(committed, deps, now)
         self._fast_gc(fb)
+
+    def _fast_coding_gated(self, fb: FastBatch, committed: List[Op],
+                           deps: dict, now: float) -> None:
+        # reconstructable set durable: continue through the lease gate
+        self._fast_lease_gated(fb, committed, deps, now)
 
     def _divert(self, fb: FastBatch, which: np.ndarray, now: float,
                 reason: str = "conflict") -> None:
@@ -264,6 +316,12 @@ class FastPathMixin:
     def _fast_gc(self, fb: FastBatch) -> None:
         if fb.n_resolved < len(fb.ops):
             return
+        if fb.coding_waits:
+            cmgr = self.coding_mgr
+            fb.coding_waits = [k for k in fb.coding_waits
+                               if cmgr is not None and k in cmgr.waits]
+            if fb.coding_waits:
+                return        # batch lives on to feed late acks to the wait
         if fb.lease_waits:
             lm = self.lease_mgr
             fb.lease_waits = [k for k in fb.lease_waits
@@ -292,6 +350,13 @@ class FastPathMixin:
         lazy expiry of stale entries) is inlined — it runs B x (n-1)
         times per client batch."""
         ops: List[Op] = msg.payload["ops"]
+        cm = self.coding_mgr
+        if cm is not None:
+            st = msg.payload.get("stripes")
+            if st:
+                # shards were physically delivered with this propose —
+                # record them even if we refuse to vote below
+                cm.recv_stripes(ops, st, msg.src, now)
         if self._isolated:
             return        # no votes from behind a partition (the round
                           # times out at the coordinator and diverts)
@@ -364,6 +429,11 @@ class FastPathMixin:
         self.send(msg.src, "fast_accept", payload)
 
     def on_fast_commit(self, msg: Msg, now: float) -> None:
+        cm = self.coding_mgr
+        if cm is not None:
+            mk = msg.payload.get("striped")
+            if mk:
+                cm.note_striped_commit(msg.payload["ops"], mk, now)
         self.apply_commit_batch(msg.payload["ops"],
                                 msg.payload.get("deps") or {}, now, "fast")
         self.flush_credits()

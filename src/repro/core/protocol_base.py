@@ -147,7 +147,7 @@ class BaseReplica(Node):
 
     def __init__(self, node_id: int, sim: Simulation, *, t_fail: int,
                  steepness: Optional[float] = None, group_cap: int = 64,
-                 leases=None, reassign=None):
+                 leases=None, reassign=None, coding=None):
         super().__init__(node_id, sim)
         n = sim.n
         self.t_fail = t_fail
@@ -248,6 +248,16 @@ class BaseReplica(Node):
             self.reassign_mgr = ReassignManager(self, reassign)
         else:
             self.reassign_mgr = None
+        # payload striping (repro.coding): None unless the Scenario's
+        # default-off ``coding`` knob is set. The manager binds itself as
+        # the RSM's read resolver; with the knob off the resolver stays
+        # None and every hook below short-circuits on one attribute read.
+        if coding is not None:
+            from repro.coding.manager import CodingManager
+            self.coding_mgr = CodingManager(self, coding)
+            self.rsm.resolver = self.coding_mgr.resolve_read
+        else:
+            self.coding_mgr = None
 
     # -- weights -------------------------------------------------------------
 
@@ -458,8 +468,10 @@ class BaseReplica(Node):
             # connectivity is back after an isolation episode: pull a
             # snapshot exactly like a crash-recovery rejoin (the flag
             # stays set until on_sync_state installs it, so safety
-            # checkers keep excluding our possibly-holed log)
-            self.on_recover(now)
+            # checkers keep excluding our possibly-holed log) — but the
+            # process never died: durable local holdings (erasure-coded
+            # shards) survive the resync
+            self.on_recover(now, lost_memory=False)
 
     # -- accepted-op recovery sweep -------------------------------------------
 
@@ -525,7 +537,7 @@ class BaseReplica(Node):
     # a snapshot from a live peer, then (d) installs it and replays the
     # buffer (op_id-idempotent). It does not claim leadership until synced.
 
-    def on_recover(self, now: float) -> None:
+    def on_recover(self, now: float, lost_memory: bool = True) -> None:
         self.recovering = True
         self._leader_invalidate()
         self._recovery_buf = []
@@ -553,6 +565,8 @@ class BaseReplica(Node):
             self.lease_mgr.on_recover(now)
         if self.reassign_mgr is not None:
             self.reassign_mgr.on_recover(now)
+        if self.coding_mgr is not None:
+            self.coding_mgr.on_recover(now, lost_memory)
         self._request_sync(now, attempt=0)
 
     def _request_sync(self, now: float, attempt: int) -> None:
@@ -595,6 +609,11 @@ class BaseReplica(Node):
             # the installed weight view rides the snapshot: a rejoining
             # node must quorum under the ranking the cluster runs on
             payload["wview"] = self.reassign_mgr.export_state()
+        if self.coding_mgr is not None:
+            # stripe metadata rides the snapshot: a healing replica must
+            # know which objects' values it cannot decode locally (its
+            # recovery sweep then re-fetches the missing shards)
+            payload["coding"] = self.coding_mgr.export_state()
         self.send(msg.src, "sync_state", payload,
                   size_ops=len(self.rsm.applied_ops))
 
@@ -613,6 +632,10 @@ class BaseReplica(Node):
             self.lease_mgr.install_state(p["leases"], now)
         if self.reassign_mgr is not None and "wview" in p:
             self.reassign_mgr.install_state(p["wview"], now)
+        if self.coding_mgr is not None and "coding" in p:
+            # install + recovery sweep: re-fetch missing shards before
+            # this replica resumes resolving reads on striped objects
+            self.coding_mgr.install_state(p["coding"], now)
         for obj, entries in self._obj_buffer.items():
             for op, _, _ in entries:
                 self.set_timer(self.gc_timeout, "dep_timeout",
@@ -728,6 +751,7 @@ class BaseReplica(Node):
         in_flight = self.in_flight
         last_applied = self.last_applied
         read_results = self.sim.read_results   # transport only (sim: None)
+        cm = self.coding_mgr
         is_slow = path == "slow"
         applied_now = []
         for op in ops:
@@ -759,10 +783,13 @@ class BaseReplica(Node):
             if op.kind == "w":
                 store[obj] = op.value
                 log.append((obj, op_id, op.value))
+                if cm is not None:
+                    cm.note_write_applied(obj, op_id)
             else:
                 log.append((obj, op_id, None))
                 if op.path != "local":  # lease-answered read keeps its answer
-                    op.read_result = store.get(obj)
+                    if cm is None or cm.resolve_read(op):
+                        op.read_result = store.get(obj)
                 if read_results is not None:
                     read_results[op_id] = op.read_result
             fl = in_flight.get(obj)
@@ -781,6 +808,8 @@ class BaseReplica(Node):
     def _apply_now(self, op, now: float, path: str) -> None:
         self.sim.busy(self.node_id, self._apply_cost)
         self.rsm.apply(op)
+        if op.kind == "w" and self.coding_mgr is not None:
+            self.coding_mgr.note_write_applied(op.obj, op.op_id)
         if op.kind == "r":
             rr = self.sim.read_results         # transport only (sim: None)
             if rr is not None:
@@ -868,6 +897,10 @@ class BaseReplica(Node):
             if self.lease_mgr is not None:
                 self.lease_mgr.on_timer(payload, now)
             return
+        if name == "coding_t":
+            if self.coding_mgr is not None:
+                self.coding_mgr.on_timer(payload, now)
+            return
         self.on_protocol_timer(name, payload, now)
 
     # -- read leases (repro.core.leases) -----------------------------------
@@ -907,6 +940,28 @@ class BaseReplica(Node):
     def on_llease_grant(self, msg: Msg, now: float) -> None:
         if self.lease_mgr is not None and not self.recovering:
             self.lease_mgr.on_ll_grant(msg, now)
+
+    # -- payload striping (repro.coding) ------------------------------------
+    # Same contract as the lease hooks: stripe traffic only exists when
+    # every replica was constructed with a CodingManager, and the None
+    # guards make stray messages harmless.
+
+    def on_stripe_push(self, msg: Msg, now: float) -> None:
+        if self.coding_mgr is not None and not self.recovering:
+            self.coding_mgr.on_push(msg, now)
+
+    def on_stripe_ack(self, msg: Msg, now: float) -> None:
+        if self.coding_mgr is not None and not self.recovering:
+            self.coding_mgr.on_push_ack(msg, now)
+
+    def on_stripe_fetch(self, msg: Msg, now: float) -> None:
+        if self.coding_mgr is not None and not self.recovering \
+                and not self._isolated:
+            self.coding_mgr.on_fetch(msg, now)
+
+    def on_stripe_fill(self, msg: Msg, now: float) -> None:
+        if self.coding_mgr is not None and not self.recovering:
+            self.coding_mgr.on_fill(msg, now)
 
     # -- weight reassignment (repro.core.reassign) --------------------------
     # Same contract as the lease hooks: traffic only exists when every

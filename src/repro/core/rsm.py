@@ -38,12 +38,17 @@ class RSM:
     """
 
     __slots__ = ("store", "applied_ops", "apply_count",
-                 "_log", "_applied", "_obj_ops", "_mark")
+                 "_log", "_applied", "_obj_ops", "_mark", "resolver")
 
     def __init__(self):
         self.store: Dict[int, int] = {}
         self.applied_ops: set[int] = set()
         self.apply_count = 0
+        # read-resolution hook (repro.coding): when set, a non-local
+        # read is stamped only if resolver(op) is True — a replica that
+        # cannot decode the object's striped value parks the read and
+        # stamps it after repair. None (the default) = always stamp.
+        self.resolver = None
         self._log: List[Tuple[int, int, object]] = []  # (obj, op_id, value|None=read)
         self._applied: Dict[int, List[int]] = defaultdict(list)
         self._obj_ops: Dict[int, List[int]] = defaultdict(list)
@@ -114,7 +119,9 @@ class RSM:
         # stuck behind a partition), and re-sampling the store here
         # would overwrite the result after its linearization point.
         if op.path != "local":
-            op.read_result = self.store.get(obj)
+            r = self.resolver
+            if r is None or r(op):
+                op.read_result = self.store.get(obj)
         return op.read_result
 
 

@@ -124,6 +124,22 @@ class CostModel:
     net_cross: float = 300e-6     # extra one-way delay across groups
     net_remote_client: float = 1.2e-3  # extra one-way client<->remote group
 
+    # Payload-size dimension (repro.coding): per-byte costs, all zero by
+    # default so every message is priced identically to the historical
+    # model unless a run opts into value sizes. The wire term charges the
+    # SENDER (NIC serialization occupies the sender, store-and-forward:
+    # the byte time also delays arrival); the parse term charges the
+    # receiver. ``link_bw`` is a per-replica relative wire-slowdown tuple
+    # (indexed by group-local id like ``speeds``; () = uniform): a link's
+    # per-byte time is c_byte_wire scaled by the slower endpoint.
+    c_byte_wire: float = 0.0      # seconds per byte on the wire
+    c_byte_parse: float = 0.0     # seconds per byte to parse on receive
+    link_bw: Tuple[float, ...] = ()
+
+    def bw(self, replica: int) -> float:
+        lb = self.link_bw
+        return lb[replica % len(lb)] if lb else 1.0
+
     # Heterogeneity: mild CPU spread + strongly heterogeneous network
     # distance (a geo-distributed deployment — §2.3's multi-region story).
     # Weighted quorums pay off by *not waiting* for far/slow replicas.
@@ -195,6 +211,9 @@ class Op:
     read_result: object = None # for reads: value returned at the
                                # serialization point (same at every replica
                                # because per-object apply order is agreed)
+    size: int = 0              # payload bytes (0 = historical sizeless op;
+                               # drives the per-byte cost terms and the
+                               # coding subsystem's stripe policy)
 
 
 @dataclasses.dataclass(eq=False, slots=True)
@@ -204,6 +223,8 @@ class Msg:
     dst: int
     payload: dict
     size_ops: int = 0          # number of ops carried (drives c_parse)
+    size_bytes: int = 0        # payload bytes on the wire (drives the
+                               # per-byte cost terms; 0 = metadata-only)
 
 
 class TimerHandle:
@@ -242,13 +263,15 @@ class Node:
 
     # -- convenience --------------------------------------------------------
 
-    def send(self, dst: int, kind: str, payload: dict, size_ops: int = 0):
-        self.sim.post(Msg(kind, self.node_id, dst, payload, size_ops))
+    def send(self, dst: int, kind: str, payload: dict, size_ops: int = 0,
+             size_bytes: int = 0):
+        self.sim.post(Msg(kind, self.node_id, dst, payload, size_ops,
+                          size_bytes))
 
     def broadcast(self, dsts: Sequence[int], kind: str, payload: dict,
-                  size_ops: int = 0):
+                  size_ops: int = 0, size_bytes: int = 0):
         for d in dsts:
-            self.send(d, kind, payload, size_ops)
+            self.send(d, kind, payload, size_ops, size_bytes)
 
     def set_timer(self, delay: float, name: str,
                   payload: dict | None = None) -> TimerHandle:
@@ -311,7 +334,15 @@ class EventEngine:
         self._recv_c: List[float] = []
         self._parse_c: List[float] = []
         self._delay_base: List[List[float]] = []
+        # per-byte cost tables (repro.coding): row lists are only consulted
+        # when a message carries size_bytes > 0, so the default (sizeless)
+        # event path executes the exact historical float arithmetic
+        self._byte_wire: List[List[float]] = []
+        self._byte_parse: List[float] = []
         self._tables_ok = False
+        # committed ops that shipped striped (repro.coding manager bumps
+        # this once per op id); deterministic, surfaced as striped_frac
+        self.striped_ops = 0
         # per-link state, keyed src<<24|dst: [next jitter seq, last arrival].
         # The seq half is the jitter coordinate and must never reset (the
         # stream is a pure function of link history); the arrival half is
@@ -486,6 +517,16 @@ class EventEngine:
         self._parse_c[:] = parse_c
         self._delay_base[:] = [[self._delay_base_for(s, d)
                                 for d in range(size)] for s in range(size)]
+        # per-byte tables: a link's wire time is scaled by the slower
+        # endpoint's relative bandwidth (client endpoints count as 1.0);
+        # parse is receiver-side, replica-only (clients never bottleneck)
+        bw = [c.bw(self._local(i)) if i < self.n else 1.0
+              for i in range(size)]
+        cbw = c.c_byte_wire
+        self._byte_wire[:] = [[cbw * (bw[s] if bw[s] >= bw[d] else bw[d])
+                               for d in range(size)] for s in range(size)]
+        self._byte_parse[:] = [c.c_byte_parse * c.speed(self._local(i))
+                               if i < self.n else 0.0 for i in range(size)]
         self._tables_ok = True
 
     def busy(self, node_id: int, seconds: float) -> None:
@@ -515,6 +556,14 @@ class EventEngine:
         t = b[src]
         now = self.now
         send_done = (t if t > now else now) + self._send_c[src]
+        # per-byte wire time: NIC serialization occupies the sender and
+        # (store-and-forward) delays the arrival by the same amount. The
+        # guard keeps the sizeless path's float arithmetic byte-identical;
+        # crucially the term only ever ADDS delay, so the parallel
+        # runner's zero-byte conservative lookahead stays valid.
+        nb = msg.size_bytes
+        if nb:
+            send_done += nb * self._byte_wire[src][dst]
         b[src] = send_done
         # per-link record: [next jitter seq, last arrival]. The jitter
         # coordinate is the count of prior messages on this link — a pure
@@ -668,6 +717,7 @@ class EventEngine:
         nodes = self._nodes
         recv_c = self._recv_c
         parse_c = self._parse_c
+        byte_parse = self._byte_parse
         crashed = self.crashed
         events = self.stats_events
         collapsed = self.stats_collapsed
@@ -707,6 +757,9 @@ class EventEngine:
                         bt = busy[dst]
                         done = (t if t >= bt else bt) + recv_c[dst] \
                             + parse_c[dst] * msg.size_ops
+                        nb = msg.size_bytes
+                        if nb:      # sizeless path: arithmetic untouched
+                            done += byte_parse[dst] * nb
                         busy[dst] = done
                         if done <= until and (not heap
                                               or heap[0][0] > done):
@@ -798,6 +851,35 @@ class Workload:
     n_common_objects: int = 64
     n_hot_objects: int = 4
     reads_fraction: float = 0.0
+    # value-size axis (repro.coding / per-byte cost model). "" keeps ops
+    # sizeless — zero extra rng draws, so the classic mixes' draw streams
+    # (and every golden pin) are untouched. "fixed" = size_small always;
+    # "bimodal" = size_large w.p. p_large else size_small; "lognormal" =
+    # size_small-median heavy tail with shape size_sigma.
+    size_dist: str = ""
+    size_small: int = 256
+    size_large: int = 1 << 20
+    p_large: float = 0.1
+    size_sigma: float = 1.5
+
+    def __post_init__(self):
+        if self.size_dist not in ("", "fixed", "bimodal", "lognormal"):
+            raise ValueError(f"unknown size_dist {self.size_dist!r} "
+                             "(want '', 'fixed', 'bimodal' or 'lognormal')")
+
+    @property
+    def sizes_on(self) -> bool:
+        return bool(self.size_dist)
+
+    def sample_size(self, client: int, rng: np.random.Generator) -> int:
+        d = self.size_dist
+        if d == "bimodal":
+            return (self.size_large if rng.random() < self.p_large
+                    else self.size_small)
+        if d == "lognormal":
+            return max(1, int(self.size_small
+                              * rng.lognormal(0.0, self.size_sigma)))
+        return self.size_small          # "fixed"
 
     def sample_object(self, client: int, rng: np.random.Generator) -> int:
         # index draws use random()*N (uniform up to fp granularity): it is
@@ -845,6 +927,11 @@ class Client(Node):
         # absent on the classic mixes, so the default submit loop is
         # untouched; when present, _maybe_submit idles between bursts
         self._gap_fn = getattr(workload, "submit_gap", None)
+        # value-size hook (repro.scenario.workloads contract): only bound
+        # when the generator declares sizes_on, so classic mixes draw
+        # nothing extra and stay bit-identical
+        self._size_fn = (workload.sample_size
+                         if getattr(workload, "sizes_on", False) else None)
         self._gap_paid = -1          # last batch index whose gap was paid
         self._gap_wait = False       # gap timer pending: acks must not
                                      # sneak submissions past the idle
@@ -892,13 +979,24 @@ class Client(Node):
         now = self.sim.now
         node_id = self.node_id
         value_seed = self.value_seed
+        size_fn = self._size_fn
         for _ in range(self.batch_size):
             oid = (node_id << 40) | self._next_op
             self._next_op += 1
             obj = self._sample_object()
             kind = kind_of(node_id, rng)
-            ops.append(Op(oid, node_id, obj, kind, oid ^ value_seed, now))
+            op = Op(oid, node_id, obj, kind, oid ^ value_seed, now)
+            if size_fn is not None:
+                op.size = size_fn(node_id, rng)
+            ops.append(op)
         return ops
+
+    def _ops_bytes(self, ops: List[Op]) -> int:
+        """Wire bytes of a batch (0 without a size hook: the sizeless
+        path never sums)."""
+        if self._size_fn is None:
+            return 0
+        return sum(op.size for op in ops)
 
     def _new_batch_id(self) -> int:
         bid = (self.node_id << 32) | self._next_batch
@@ -913,7 +1011,8 @@ class Client(Node):
                "unacked": {op.op_id for op in ops}}
         self._open[bid] = rec
         self.send(target, "client_req",
-                  {"batch_id": bid, "ops": ops}, size_ops=len(ops))
+                  {"batch_id": bid, "ops": ops}, size_ops=len(ops),
+                  size_bytes=self._ops_bytes(ops))
         rec["timer"] = self.set_timer(self.RETRY, "client_retry",
                                       {"bid": bid})
 
@@ -999,7 +1098,8 @@ class Client(Node):
         rec["target"] = self._retry_target(rec)
         self.send(rec["target"], "client_req",
                   {"batch_id": payload["bid"], "ops": rec["ops"]},
-                  size_ops=len(rec["ops"]))
+                  size_ops=len(rec["ops"]),
+                  size_bytes=self._ops_bytes(rec["ops"]))
         rec["timer"] = self.set_timer(self.RETRY * min(4, 1 + rec["attempt"]),
                                       "client_retry", payload)
 
@@ -1029,6 +1129,9 @@ class RunResult:
     # (repro.core.leases); 0.0 when leases are off or the workload is
     # write-only. Deterministic, so part of the same-seed contract.
     read_local_frac: float = 0.0
+    # fraction of committed ops whose value shipped erasure-striped
+    # (repro.coding); 0.0 with coding off. Deterministic.
+    striped_frac: float = 0.0
     # engine telemetry (wall-clock side — excluded from determinism checks)
     events: int = 0
     events_per_sec: float = 0.0
@@ -1083,6 +1186,7 @@ def collect_metrics(protocol: str, sim: Simulation, clients: List[Client],
         latency_p99_ms=float(np.percentile(lat, 99)) if len(lat) else float("nan"),
         fast_path_frac=fast / len(ops) if ops else 0.0,
         read_local_frac=local / reads if reads else 0.0,
+        striped_frac=sim.striped_ops / len(ops) if ops else 0.0,
         messages=sim.stats_messages,
         events=sim.stats_events,
         events_per_sec=(sim.stats_events / sim.wall_s

@@ -43,6 +43,7 @@ class SlowInstance:
     committed: bool = False
     timer: object = None      # slow_inst_timeout handle (cancelled on commit)
     lease_wait: object = None # pending revocation-wait key (leases on)
+    coding_wait: object = None # pending reconstructable-set key (coding on)
 
 
 class SlowPathMixin:
@@ -140,7 +141,8 @@ class SlowPathMixin:
             self._enqueue_slow(ops, now)
         else:
             self.send(leader, "slow_forward", {"ops": ops},
-                      size_ops=len(ops))
+                      size_ops=len(ops),
+                      size_bytes=sum(op.size for op in ops))
         # retransmission guards against leader failure, not queueing delay:
         # exponential backoff, generous initial timeout (the leader dedupes
         # anyway, but duplicate forwards are wasted messages)
@@ -165,7 +167,9 @@ class SlowPathMixin:
                 # client's retry) re-drives it once views converge.
                 return
             self.send(leader, "slow_forward", msg.payload,
-                      size_ops=len(msg.payload["ops"]))
+                      size_ops=len(msg.payload["ops"]),
+                      size_bytes=sum(op.size
+                                     for op in msg.payload["ops"]))
             return
         self._enqueue_slow(msg.payload["ops"], now)
 
@@ -204,7 +208,8 @@ class SlowPathMixin:
                     self._slow_pending_remove(op)
                     self._forwarded[op.op_id] = op
                 self.send(leader, "slow_forward", {"ops": ops},
-                          size_ops=len(ops))
+                          size_ops=len(ops),
+                          size_bytes=sum(op.size for op in ops))
             return
         self.slow_mutex = True                      # lock(mutex)
         # group commit: merge queued forwards into one instance, up to the
@@ -244,8 +249,21 @@ class SlowPathMixin:
             # nack it (repro.core.reassign) — the key only appears once
             # an epoch exists, so fault-free payloads are unchanged
             self.reassign_mgr.stamp(payload)
-        self.broadcast(self._others, "slow_propose", payload,
-                       size_ops=len(ops))
+        cm = self.coding_mgr
+        if cm is not None and cm.plan_batch(ops, now):
+            # striped instance: per-destination proposes, one distinct
+            # shard per assignee (the leader is the origin here)
+            for dst in self._others:
+                stripes, nb = cm.stripe_payload_for(ops, dst)
+                p2 = dict(payload)
+                if stripes:
+                    p2["stripes"] = stripes
+                self.send(dst, "slow_propose", p2, size_ops=len(ops),
+                          size_bytes=nb)
+        else:
+            self.broadcast(self._others, "slow_propose", payload,
+                           size_ops=len(ops),
+                           size_bytes=sum(op.size for op in ops))
         inst.timer = self.set_timer(self.sim.costs.timeout,
                                     "slow_inst_timeout",
                                     {"inst": inst.inst_id})
@@ -263,6 +281,11 @@ class SlowPathMixin:
                                   {"inst": inst.inst_id}), now)
             return
         inst.acked.add(msg.src)
+        if inst.coding_wait is not None:
+            # decided striped instance awaiting its reconstructable set:
+            # this accept proves the follower holds its assigned shards
+            self.coding_mgr.wait_ack(inst.coding_wait, msg.src, now)
+            return
         if inst.lease_wait is not None:
             # decided instance gated on a lease: this accept doubles as
             # the follower's revocation ack
@@ -290,6 +313,25 @@ class SlowPathMixin:
                 if sampled(op.op_id):
                     tr.ev("slow_commit", now, self.node_id,
                           inst.inst_id, op.op_id)
+        cm = self.coding_mgr
+        if cm is not None:
+            key = cm.gate_commit(
+                inst.ops, now,
+                lambda t, i=inst: self._slow_coding_gated(i, t),
+                inst.acked)
+            if key is not None:
+                # a striped instance crossed its weighted threshold
+                # before its reconstructable set is durable: hold the
+                # mutex and wait for enough distinct shard acks
+                inst.coding_wait = key
+                return
+        self._slow_lease_gated(inst, now)
+
+    def _slow_coding_gated(self, inst: SlowInstance, now: float) -> None:
+        inst.coding_wait = None
+        self._slow_lease_gated(inst, now)
+
+    def _slow_lease_gated(self, inst: SlowInstance, now: float) -> None:
         lm = self.lease_mgr
         if lm is not None:
             key = lm.gate_commit(
@@ -306,8 +348,14 @@ class SlowPathMixin:
         self._slow_finalize(inst, now)
 
     def _slow_finalize(self, inst: SlowInstance, now: float) -> None:
-        self.broadcast(self._others, "slow_commit",
-                       {"ops": inst.ops, "deps": inst.deps},
+        cm = self.coding_mgr
+        mk = cm.commit_marker(inst.ops) if cm is not None else None
+        payload = {"ops": inst.ops, "deps": inst.deps}
+        if mk:
+            payload["striped"] = mk
+            # marker before apply: the local apply GC's the plan recs
+            cm.note_striped_commit(inst.ops, mk, now)
+        self.broadcast(self._others, "slow_commit", payload,
                        size_ops=len(inst.ops))
         self._apply_slow_commit(inst.ops, inst.deps, now)
         self.slow_inst = None
@@ -335,6 +383,13 @@ class SlowPathMixin:
     # -- follower side -----------------------------------------------------------
 
     def on_slow_propose(self, msg: Msg, now: float) -> None:
+        cm = self.coding_mgr
+        if cm is not None:
+            st = msg.payload.get("stripes")
+            if st:
+                # shards were physically delivered with this propose —
+                # record them even if we refuse to vote below
+                cm.recv_stripes(msg.payload["ops"], st, msg.src, now)
         if self._isolated:
             return        # no votes from behind a partition (split-brain
                           # guard; the proposer's instance times out)
@@ -368,6 +423,11 @@ class SlowPathMixin:
         self.send(msg.src, "slow_accept", {"inst": msg.payload["inst"]})
 
     def on_slow_commit(self, msg: Msg, now: float) -> None:
+        cm = self.coding_mgr
+        if cm is not None:
+            mk = msg.payload.get("striped")
+            if mk:
+                cm.note_striped_commit(msg.payload["ops"], mk, now)
         self._apply_slow_commit(msg.payload["ops"],
                                 msg.payload.get("deps", {}), now)
 
@@ -389,7 +449,8 @@ class SlowPathMixin:
                 leader = self.current_leader(now)
                 if leader != self.node_id:
                     self.send(leader, "slow_forward", {"ops": stale},
-                              size_ops=len(stale))
+                              size_ops=len(stale),
+                              size_bytes=sum(op.size for op in stale))
                 else:
                     self._enqueue_slow(stale, now)
                 self.set_timer(self.sim.costs.timeout * 4 * backoff,
@@ -405,8 +466,22 @@ class SlowPathMixin:
                 payload = {"inst": inst.inst_id, "ops": inst.ops}
                 if self.reassign_mgr is not None:
                     self.reassign_mgr.stamp(payload)
-                self.broadcast(missing, "slow_propose", payload,
-                               size_ops=len(inst.ops))
+                cm = self.coding_mgr
+                if cm is not None and cm.has_stripes(inst.ops):
+                    # the gate counts an assignee's accept as "holds its
+                    # shard", so re-proposes MUST re-carry the shards
+                    for dst in missing:
+                        st, nb = cm.stripe_payload_for(inst.ops, dst)
+                        p2 = dict(payload)
+                        if st:
+                            p2["stripes"] = st
+                        self.send(dst, "slow_propose", p2,
+                                  size_ops=len(inst.ops), size_bytes=nb)
+                else:
+                    self.broadcast(missing, "slow_propose", payload,
+                                   size_ops=len(inst.ops),
+                                   size_bytes=sum(op.size
+                                                  for op in inst.ops))
                 inst.timer = self.set_timer(self.sim.costs.timeout,
                                             "slow_inst_timeout",
                                             {"inst": inst.inst_id})

@@ -28,6 +28,11 @@ into additive components:
                    (``weight_install`` engine events) — the epoch-fence
                    drain/handoff pause, split out of ``dep_stall`` so
                    reassignment cost is visible per path,
+  ``coding``       payload striping on: quorum decision -> commit stamp
+                   time a striped write spent waiting for a weighted
+                   *reconstructable* shard set (enough distinct assigned
+                   shards to decode, not just enough ack weight — the
+                   ``coding_wait`` span the commit gate records),
   ``other``        the (near-zero) remainder, including ops whose span
                    is incomplete (sampled out or committed via the
                    recovery/retry path with no quorum round of their
@@ -51,7 +56,7 @@ from typing import Dict, List, Optional, Tuple
 
 _COMPONENTS = ("ingress_s", "coord_s", "queue_s", "quorum_link_s",
                "straggler_s", "dep_stall_s", "lease_s", "reassign_s",
-               "other_s")
+               "coding_s", "other_s")
 
 
 @dataclasses.dataclass
@@ -67,6 +72,7 @@ class PathBreakdown:
     dep_stall_s: float = 0.0
     lease_s: float = 0.0
     reassign_s: float = 0.0
+    coding_s: float = 0.0
     other_s: float = 0.0
 
     def add(self, total: float, **parts: float) -> None:
@@ -148,6 +154,7 @@ def analyze_events(events: List[tuple],
     accepts: Dict[Tuple[str, int], List[Tuple[float, int]]] = {}
     stall_t: Dict[Tuple[int, int], float] = {}         # (node, op) -> t
     lease_wait_t: Dict[Tuple[int, int], float] = {}    # (node, op) -> t
+    coding_wait_t: Dict[Tuple[int, int], float] = {}   # (node, op) -> t
     installs: List[float] = []                         # weight-view installs
 
     for e in events:
@@ -176,6 +183,8 @@ def analyze_events(events: List[tuple],
             stall_t.setdefault((node, e[3]), t)
         elif kind == "lease_wait":
             lease_wait_t.setdefault((node, e[3]), t)
+        elif kind == "coding_wait":
+            coding_wait_t.setdefault((node, e[3]), t)
         elif kind == "weight_install":
             installs.append(t)
     installs.sort()
@@ -202,6 +211,7 @@ def analyze_events(events: List[tuple],
         bd = (fast_bd if path == "fast"
               else local_bd if path == "local" else slow_bd)
         wait_t = lease_wait_t.get((commit_node, op_id))
+        cw_t = coding_wait_t.get((commit_node, op_id))
 
         if path == "fast" and op_id in fb_of_op:
             fb = fb_of_op[op_id]
@@ -211,13 +221,25 @@ def analyze_events(events: List[tuple],
                    if a[0] <= decide_t]
             parts, decisive = _quorum_parts(propose_t, decide_t, arr)
             stall = stall_t.get((commit_node, op_id))
-            if wait_t is not None:
+            if cw_t is not None:
+                # shard-durability pause: the weighted-reconstructable
+                # gate engaged at decide time; the lease gate (if any)
+                # runs after it, so the coding span ends where the lease
+                # span begins
+                end = (wait_t if wait_t is not None and wait_t >= cw_t
+                       else commit_t)
+                coding_s = max(0.0, end - cw_t)
+                lease_s = (max(0.0, commit_t - wait_t)
+                           if wait_t is not None else 0.0)
+                dep_stall_s = max(0.0, cw_t - decide_t)
+            elif wait_t is not None:
                 # revocation pause: the gate engaged at decide time and
                 # the stamp waited for the remaining round acks / expiry
+                coding_s = 0.0
                 lease_s = max(0.0, commit_t - wait_t)
                 dep_stall_s = max(0.0, wait_t - decide_t)
             else:
-                lease_s = 0.0
+                coding_s = lease_s = 0.0
                 dep_stall_s = (commit_t - decide_t
                                if stall is not None or commit_t > decide_t
                                else 0.0)
@@ -229,7 +251,7 @@ def analyze_events(events: List[tuple],
                    ingress_s=ingress_t - submit,
                    coord_s=propose_t - ingress_t,
                    dep_stall_s=dep_stall_s, lease_s=lease_s,
-                   reassign_s=reassign_s,
+                   reassign_s=reassign_s, coding_s=coding_s,
                    **parts)
         elif path not in ("fast", "local") and op_id in inst_of_op:
             inst = inst_of_op[op_id]
@@ -239,11 +261,19 @@ def analyze_events(events: List[tuple],
             arr = [a for a in accepts.get(("s", inst), ())
                    if a[0] <= decide_t]
             parts, decisive = _quorum_parts(propose_t, decide_t, arr)
-            if wait_t is not None:
+            if cw_t is not None:
+                end = (wait_t if wait_t is not None and wait_t >= cw_t
+                       else commit_t)
+                coding_s = max(0.0, end - cw_t)
+                lease_s = (max(0.0, commit_t - wait_t)
+                           if wait_t is not None else 0.0)
+                dep_stall_s = max(0.0, cw_t - decide_t)
+            elif wait_t is not None:
+                coding_s = 0.0
                 lease_s = max(0.0, commit_t - wait_t)
                 dep_stall_s = max(0.0, wait_t - decide_t)
             else:
-                lease_s = 0.0
+                coding_s = lease_s = 0.0
                 dep_stall_s = commit_t - decide_t
             reassign_s = 0.0
             if dep_stall_s > 0.0 and _install_in(installs, decide_t,
@@ -254,7 +284,7 @@ def analyze_events(events: List[tuple],
                    coord_s=enq_t - ingress_t,
                    queue_s=propose_t - enq_t,
                    dep_stall_s=dep_stall_s, lease_s=lease_s,
-                   reassign_s=reassign_s,
+                   reassign_s=reassign_s, coding_s=coding_s,
                    **parts)
         else:
             # committed without a quorum round of its own (retry hit on

@@ -21,22 +21,23 @@ here would cycle back into them.
 from repro.scenario.registry import (ProtocolInfo, protocol_class,
                                      protocol_info, protocol_names,
                                      protocols_with, register_protocol)
-from repro.scenario.spec import (Leases, Observability, Reassign,
+from repro.scenario.spec import (Coding, Leases, Observability, Reassign,
                                  Scenario, Sharding, Verification,
                                  fault_from_dict, fault_to_dict)
 from repro.scenario.workloads import (BurstyWorkload, HotspotDriftWorkload,
-                                      ZipfWorkload, make_workload,
-                                      register_workload, workload_kinds,
-                                      workload_ref)
+                                      ValueSizesWorkload, ZipfWorkload,
+                                      make_workload, register_workload,
+                                      workload_kinds, workload_ref)
 
 __all__ = ["Scenario", "Sharding", "Verification", "Observability",
-           "Leases", "Reassign",
+           "Leases", "Reassign", "Coding",
            "run_scenario",
            "ProtocolInfo", "register_protocol", "protocol_info",
            "protocol_class", "protocol_names", "protocols_with",
            "register_workload", "make_workload", "workload_ref",
            "workload_kinds", "ZipfWorkload", "HotspotDriftWorkload",
-           "BurstyWorkload", "fault_to_dict", "fault_from_dict"]
+           "BurstyWorkload", "ValueSizesWorkload",
+           "fault_to_dict", "fault_from_dict"]
 
 
 def __getattr__(name):

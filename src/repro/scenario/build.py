@@ -60,6 +60,18 @@ def _reassign_cfg(sc: Scenario):
                           epoch_fence=ra.epoch_fence)
 
 
+def _coding_cfg(sc: Scenario):
+    """Lower the declarative Coding knob to the picklable CodingConfig
+    the replica constructor takes (None when disabled — no CodingManager
+    is constructed and the run is bit-identical to pre-coding builds)."""
+    cd = sc.coding
+    if cd is None or not cd.enabled:
+        return None
+    from repro.coding.manager import CodingConfig
+    return CodingConfig(stripe_min_bytes=cd.stripe_min_bytes,
+                        parity=cd.parity)
+
+
 def lower_sharded(sc: Scenario) -> ShardedRunConfig:
     """The sharded run plan: a Scenario flattened onto the internal
     ShardedRunConfig carrier (also what parallel workers unpickle)."""
@@ -76,7 +88,8 @@ def lower_sharded(sc: Scenario) -> ShardedRunConfig:
         costs=sc.costs, seed=sc.seed, sim_time_cap=sc.sim_time_cap,
         workers=sh.workers, faults=sc.faults,
         capture_history=sc.verify.capture_history, obs=sc.obs,
-        leases=_lease_cfg(sc), reassign=_reassign_cfg(sc))
+        leases=_lease_cfg(sc), reassign=_reassign_cfg(sc),
+        coding=_coding_cfg(sc))
 
 
 def run_scenario(sc: Scenario) -> Union[RunArtifacts,
@@ -110,8 +123,9 @@ def _run_flat(sc: Scenario) -> RunArtifacts:
     t = max(1, min(sc.t_fail, (sc.n_replicas - 1) // 2))
     leases = _lease_cfg(sc)
     reassign = _reassign_cfg(sc)
+    coding = _coding_cfg(sc)
     replicas = [cls(i, sim, t_fail=t, group_cap=max(sc.batch_size, 1),
-                    leases=leases, reassign=reassign)
+                    leases=leases, reassign=reassign, coding=coding)
                 for i in range(sc.n_replicas)]
     for rep in replicas:
         sim.add_node(rep)
@@ -139,6 +153,14 @@ def _run_flat(sc: Scenario) -> RunArtifacts:
     # clients bump sim.clients_done exactly once on completion, so the
     # per-event stop check is a counter compare, not an all() scan
     sim.run(until=sc.sim_time_cap, stop_when_clients_done=len(clients))
+
+    if sc.coding is not None:
+        # the engine halts the moment the last client acks: a read of a
+        # striped object committed in the final instants can still be
+        # parked, its stamp cut off by the shutdown rather than by data
+        # loss — flush it iff the stripe is reconstructable cluster-wide
+        from repro.coding import drain_pending_reads
+        drain_pending_reads(replicas)
 
     result = collect_metrics(sc.protocol, sim, clients, sc.batch_size,
                              t_start=0.0)

@@ -47,6 +47,11 @@ class ProtocolInfo:
       shared slow-path leader; validation rejects the knob elsewhere
       (paxos runs flat weights by definition, epaxos has no leader
       anchor to fence an install on).
+    * ``coding`` — the replica class honors ``Scenario.coding``
+      (repro.coding): adaptive Crossword-style payload striping with
+      the weighted-reconstructable commit gate. Requires the dual-path
+      batch commit machinery (fastpath/slowpath hooks), so only WOC
+      carries it; validation rejects the knob elsewhere.
     """
 
     name: str
@@ -56,6 +61,7 @@ class ProtocolInfo:
     reads: str = "linearizable"
     lease_reads: bool = False
     reassign: bool = False
+    coding: bool = False
     description: str = ""
 
 
@@ -107,6 +113,7 @@ def _register_builtins() -> None:
     register_protocol(ProtocolInfo(
         "woc", WocReplica, leader_based=False, supports_sharding=True,
         reads="linearizable", lease_reads=True, reassign=True,
+        coding=True,
         description="dual-path weighted object consensus (the paper)"))
     register_protocol(ProtocolInfo(
         "cabinet", CabinetReplica, leader_based=True, supports_sharding=True,

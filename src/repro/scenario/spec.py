@@ -128,6 +128,26 @@ class Reassign:
 
 
 @dataclasses.dataclass(frozen=True)
+class Coding:
+    """Adaptive payload striping: Crossword-style erasure coding
+    (repro.coding). Default-off: with ``Scenario.coding=None`` no
+    CodingManager is constructed and runs are bit-identical to
+    pre-coding builds. Even with the knob on, writes below
+    ``stripe_min_bytes`` (and every op of a sizeless workload, where
+    ``op.size == 0``) ship as classic full copies.
+
+    ``stripe_min_bytes`` is the ``op.size`` floor at which the
+    coordinator considers an RS (k, m) stripe instead of a full copy;
+    ``parity`` is m, the number of parity shards per stripe (the
+    number of shard losses a committed stripe survives beyond the
+    weighted-reconstructable commit gate's margin)."""
+
+    enabled: bool = True
+    stripe_min_bytes: int = 4096
+    parity: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class Verification:
     """Post-run checking. ``capture_history`` records the client
     invoke/response history on the result (implied by any fault
@@ -159,6 +179,7 @@ class Scenario:
     obs: Optional[Observability] = None
     leases: Optional[Leases] = None
     reassign: Optional[Reassign] = None
+    coding: Optional[Coding] = None
 
     # -- validation (fail fast at construction) -----------------------------
 
@@ -303,6 +324,32 @@ class Scenario:
                         " weight-view installs cross group boundaries, "
                         "which the conservative window lookahead does "
                         "not model")
+        cd = self.coding
+        if cd is not None:
+            if not isinstance(cd, Coding):
+                raise ValueError(f"coding must be a Coding spec, "
+                                 f"got {cd!r}")
+            if cd.enabled:
+                if not info.coding:
+                    raise ValueError(
+                        f"protocol {self.protocol!r} does not support "
+                        f"payload striping (registry capability "
+                        f"coding=False)")
+                if (not isinstance(cd.stripe_min_bytes, int)
+                        or cd.stripe_min_bytes < 1):
+                    raise ValueError(
+                        f"coding.stripe_min_bytes must be an int >= 1, "
+                        f"got {cd.stripe_min_bytes!r}")
+                if not isinstance(cd.parity, int) or cd.parity < 1:
+                    raise ValueError(
+                        f"coding.parity must be an int >= 1, "
+                        f"got {cd.parity!r}")
+                if sh is not None and sh.workers > 1:
+                    raise ValueError(
+                        "coding requires serial execution (workers=1): "
+                        "shard repair fetches and stripe pushes cross "
+                        "group boundaries via stolen objects, which the "
+                        "conservative window lookahead does not model")
         if (self.verify.check_linearizable
                 and not (self.verify.capture_history or self.faults)):
             raise ValueError(
@@ -359,6 +406,8 @@ class Scenario:
                        if self.leases is not None else None),
             "reassign": (dataclasses.asdict(self.reassign)
                          if self.reassign is not None else None),
+            "coding": (dataclasses.asdict(self.coding)
+                       if self.coding is not None else None),
         }
         return d
 
@@ -377,6 +426,7 @@ class Scenario:
         obs = d.pop("obs", None)
         leases = d.pop("leases", None)
         reassign = d.pop("reassign", None)
+        coding = d.pop("coding", None)
         known = {f.name for f in dataclasses.fields(cls)}
         bad = set(d) - known
         if bad:
@@ -400,6 +450,8 @@ class Scenario:
             reassign=(reassign if isinstance(reassign, (Reassign,
                                                         type(None)))
                       else Reassign(**reassign)),
+            coding=(coding if isinstance(coding, (Coding, type(None)))
+                    else Coding(**coding)),
             **d)
 
     def to_json(self, **kw) -> str:
@@ -483,7 +535,7 @@ def fault_from_dict(d: dict):
 
 def _cost_model_from_dict(d: dict) -> CostModel:
     d = dict(d)
-    for k in ("speeds", "net_dist"):
+    for k in ("speeds", "net_dist", "link_bw"):
         if k in d:
             d[k] = tuple(d[k])
     return CostModel(**d)

@@ -243,7 +243,69 @@ class BurstyWorkload:
         return 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class ValueSizesWorkload:
+    """Value-size axis around any base mix (the data-heavy workload
+    knob, repro.coding): ``sample_object``/``sample_kind`` delegate to
+    the base untouched, and every generated op additionally draws a
+    payload size. Distributions:
+
+      * ``"fixed"``     — ``size_small`` always;
+      * ``"bimodal"``   — ``size_large`` with probability ``p_large``,
+                          else ``size_small`` (the hot-photo / cold-blob
+                          mix Crossword evaluates);
+      * ``"lognormal"`` — ``size_small``-median heavy tail with shape
+                          ``size_sigma``.
+
+    The size draw consumes rng draws *after* the base's object/kind
+    draws, so wrapping a base never re-keys its op stream — but sized
+    runs are a different draw sequence than sizeless ones by design
+    (the size IS part of the workload)."""
+
+    base: Workload = dataclasses.field(default_factory=Workload)
+    size_dist: str = "bimodal"
+    size_small: int = 256
+    size_large: int = 1 << 20
+    p_large: float = 0.1
+    size_sigma: float = 1.5
+
+    def __post_init__(self):
+        if self.size_dist not in ("fixed", "bimodal", "lognormal"):
+            raise ValueError(f"unknown size_dist {self.size_dist!r} "
+                             "(want 'fixed', 'bimodal' or 'lognormal')")
+
+    @property
+    def reads_fraction(self) -> float:
+        return getattr(self.base, "reads_fraction", 0.0)
+
+    @property
+    def sizes_on(self) -> bool:
+        return True
+
+    def reset(self) -> None:
+        base_reset = getattr(self.base, "reset", None)
+        if base_reset is not None:
+            base_reset()
+
+    def sample_object(self, client: int, rng: np.random.Generator) -> int:
+        return self.base.sample_object(client, rng)
+
+    def sample_kind(self, client: int, rng: np.random.Generator) -> str:
+        return self.base.sample_kind(client, rng)
+
+    def sample_size(self, client: int, rng: np.random.Generator) -> int:
+        d = self.size_dist
+        if d == "bimodal":
+            return (self.size_large if rng.random() < self.p_large
+                    else self.size_small)
+        if d == "lognormal":
+            return max(1, int(self.size_small
+                              * rng.lognormal(0.0, self.size_sigma)))
+        return self.size_small          # "fixed"
+
+
 register_workload("paper_mix", Workload)
 register_workload("zipf", ZipfWorkload)
 register_workload("hotspot_drift", HotspotDriftWorkload)
 register_workload("bursty", BurstyWorkload)
+register_workload("value_sizes", ValueSizesWorkload)

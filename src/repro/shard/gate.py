@@ -269,6 +269,11 @@ class _ShardGateMixin:
             rsm.store.pop(obj, None)
             if p["present"]:
                 rsm.store[obj] = p["value"]
+        if self.coding_mgr is not None:
+            # the installed value is a decoded full copy strictly newer
+            # than anything striped here under an older custody: drop any
+            # stale stripe record (and stamp reads parked on it)
+            self.coding_mgr.invalidate_obj(obj)
         if rsm.obj_ops.get(obj):
             # join the dependency machinery: post-install fast commits are
             # leader-stamped to order after this (and a commit racing ahead
@@ -307,10 +312,14 @@ class _ShardGateMixin:
         the transfer linearizable."""
         need = self.gate.admitted.get(obj, ())
         lm = self.lease_mgr
+        cm = self.coding_mgr
         if all(oid in self.rsm.applied_ops for oid in need) \
-                and (lm is None or lm.fence_obj(obj, now)):
-            # read leases fence alongside the write drain: no replica may
-            # keep serving local reads past the custody change
+                and (lm is None or lm.fence_obj(obj, now)) \
+                and (cm is None or cm.fence_obj(obj, now)):
+            # read leases and stripe state fence alongside the write
+            # drain: no replica may keep serving local reads past the
+            # custody change, and the grant ships the decoded full value
+            # (rsm.store), so the stripe record must not outlive custody
             self._shard_grant(obj, now)
         else:
             self.set_timer(self.DRAIN_POLL, "shard_drain", {"obj": obj})

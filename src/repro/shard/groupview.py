@@ -56,6 +56,16 @@ class GroupView:
     def now(self) -> float:
         return self.root.now
 
+    @property
+    def striped_ops(self) -> int:
+        return self.root.striped_ops
+
+    @striped_ops.setter
+    def striped_ops(self, v: int) -> None:
+        # engine-wide striping counter (repro.coding): views of every
+        # group bump the same root tally, like commit_log
+        self.root.striped_ops = v
+
     def to_global(self, node_id: int) -> int:
         return self.base + node_id if 0 <= node_id < self.size else node_id
 

@@ -166,7 +166,8 @@ class ShardClient(Client):
                    "unacked": {op.op_id for op in sub}}
             self._open[bid] = rec
             self.send(target, "client_req",
-                      {"batch_id": bid, "ops": sub}, size_ops=len(sub))
+                      {"batch_id": bid, "ops": sub}, size_ops=len(sub),
+                      size_bytes=self._ops_bytes(sub))
             rec["timer"] = self.set_timer(self.RETRY, "client_retry",
                                           {"bid": bid})
 

@@ -86,6 +86,10 @@ class ShardedRunConfig:
     # lowered weight-reassignment knob (repro.core.reassign.ReassignConfig)
     # or None; like leases, Scenario validation restricts it to workers=1.
     reassign: object = None
+    # lowered payload-striping knob (repro.coding.manager.CodingConfig)
+    # or None; Scenario validation restricts it to workers=1 (repair
+    # fetches on stolen objects cross group boundaries).
+    coding: object = None
 
 
 @dataclasses.dataclass
@@ -154,6 +158,10 @@ class ShardedRunResult:
     # end. Identical serial vs parallel (the merged log is), so NOT
     # telemetry.
     commit_log_residual: int = 0
+    # fraction of committed ops shipped as erasure-coded stripes
+    # (repro.coding); 0.0 without the coding knob. Deterministic (and
+    # coding is serial-only anyway), so NOT telemetry.
+    striped_frac: float = 0.0
     # weight-view install records [(t, epoch, ranking, by)] from the
     # reassignment subsystem (repro.core.reassign); ids are global.
     # Deterministic (and reassign is serial-only anyway), so NOT telemetry.
@@ -277,7 +285,8 @@ def build_group(sim, cfg: ShardedRunConfig, g: int,
     view = GroupView(sim, g, npg)
     grp = [cls(i, view, gate=gate, t_fail=t,
                group_cap=max(cfg.batch_size, 1),
-               leases=cfg.leases, reassign=cfg.reassign)
+               leases=cfg.leases, reassign=cfg.reassign,
+               coding=cfg.coding)
            for i in range(npg)]
     for rep in grp:
         sim.add_node(GroupNodeProxy(rep, view))
@@ -386,7 +395,8 @@ def run_sharded_config(cfg: ShardedRunConfig) -> ShardedRunArtifacts:
         makespan_t=sim.now, messages=sim.stats_messages,
         events=sim.stats_events, wall_s=sim.wall_s,
         heap_peak=sim.heap_peak, workers=1,
-        collapsed=sim.stats_collapsed, trace=trace)
+        collapsed=sim.stats_collapsed, trace=trace,
+        striped_ops=sim.striped_ops)
     sim.commit_log.clear()     # growth fix: residual is on the result
     result.weight_epochs = list(sim.weight_installs)
     if cfg.capture_history or cfg.faults:
@@ -411,8 +421,8 @@ def assemble_result(cfg: ShardedRunConfig, client_rows: List[ClientRow],
                     heap_peak: int = 0, workers: int = 1,
                     barriers: int = 0, idle_wait_frac: float = 0.0,
                     per_engine: Optional[List[EngineStats]] = None,
-                    collapsed: int = 0, trace: Optional[list] = None
-                    ) -> ShardedRunResult:
+                    collapsed: int = 0, trace: Optional[list] = None,
+                    striped_ops: int = 0) -> ShardedRunResult:
     """Shared metric math: one code path for serial and parallel runs, so
     identical inputs give bit-identical outputs. ``commit_log`` maps
     op_id -> (commit_time, path) — for parallel runs the per-engine logs
@@ -457,4 +467,5 @@ def assemble_result(cfg: ShardedRunConfig, client_rows: List[ClientRow],
         barriers=barriers, idle_wait_frac=idle_wait_frac,
         per_engine=per_engine or [], collapsed=collapsed,
         commit_log_residual=len(commit_log) - committed,
+        striped_frac=striped_ops / committed if committed else 0.0,
         trace=trace or [])

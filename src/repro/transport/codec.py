@@ -58,7 +58,7 @@ def _enc(x):
     if t is Op:
         return {"__op__": [x.op_id, x.client, x.obj, x.kind, x.value,
                            x.submit_time, x.commit_time, x.path,
-                           _enc(x.read_result)]}
+                           _enc(x.read_result), x.size]}
     if t is tuple:
         return {"__tup__": [_enc(v) for v in x]}
     if t is set or t is frozenset:
@@ -75,8 +75,10 @@ def _dec(x):
         if len(x) == 1:
             if "__op__" in x:
                 f = x["__op__"]
+                # 9-field frames predate the payload-size axis: peers on
+                # the old format decode as sizeless ops (size=0)
                 return Op(f[0], f[1], f[2], f[3], f[4], f[5], f[6], f[7],
-                          _dec(f[8]))
+                          _dec(f[8]), f[9] if len(f) > 9 else 0)
             if "__set__" in x:
                 return {_dec(v) for v in x["__set__"]}
             if "__tup__" in x:
@@ -90,13 +92,25 @@ def _dec(x):
 
 
 def encode_msg(msg: Msg) -> bytes:
-    """One framed message: header + tagged body."""
+    """One framed message: header + tagged body. Raises ``ValueError``
+    if the encoded body exceeds ``MAX_FRAME`` — the sender must refuse
+    to emit a frame every receiver would reject as corrupt (data-heavy
+    payloads above the bound belong in stripes, not one frame)."""
     tree = {"k": msg.kind, "s": msg.src, "d": msg.dst, "z": msg.size_ops,
             "p": _enc(msg.payload)}
+    if msg.size_bytes:
+        tree["b"] = msg.size_bytes    # absent = 0: old-format frames and
+                                      # metadata-only messages stay byte-
+                                      # identical on the wire
     if msgpack is not None:
         body = msgpack.packb(tree, use_bin_type=True)
     else:
         body = json.dumps(tree, separators=(",", ":")).encode()
+    if len(body) > MAX_FRAME:
+        raise ValueError(
+            f"encoded frame body is {len(body)} bytes, exceeds MAX_FRAME "
+            f"({MAX_FRAME}): refusing to emit an undecodable frame "
+            f"(kind={msg.kind!r}, size_ops={msg.size_ops})")
     return HEADER.pack(len(body)) + body
 
 
@@ -105,7 +119,8 @@ def decode_body(body: bytes) -> Msg:
         tree = msgpack.unpackb(body, raw=False, strict_map_key=False)
     else:
         tree = json.loads(body)
-    return Msg(tree["k"], tree["s"], tree["d"], _dec(tree["p"]), tree["z"])
+    return Msg(tree["k"], tree["s"], tree["d"], _dec(tree["p"]), tree["z"],
+               tree.get("b", 0))
 
 
 def encode_hello(node_id: int) -> bytes:

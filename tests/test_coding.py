@@ -1,0 +1,332 @@
+"""Adaptive payload striping (repro.coding).
+
+Four layers of coverage:
+
+  * codec — Reed-Solomon over GF(256) property tests: any k of the
+    k+m shards decode back to the exact payload, fewer than k raise,
+    malformed shapes are rejected (runs under real hypothesis when
+    installed, the deterministic grid shim otherwise);
+  * inertness — ``Scenario.coding=None`` and ``Coding(enabled=False)``
+    build the exact same run (no CodingManager, identical op timings),
+    and even with the knob ON a sizeless workload (op.size == 0) or
+    sub-threshold writes never stripe;
+  * safety — striped data-heavy histories stay linearizable fault-free
+    and under nemesis schedules (leader crash + recover, symmetric
+    partition + heal). The twin-control scenario doubles as the
+    regression pin for two real durability holes found while tuning it:
+    a reconstructed-from-parity holder failing to serve data shards it
+    never held (the decode-full invariant), and isolation-rejoin wiping
+    committed shard holdings as if the process had died (rejoins now
+    keep them: ``on_recover(lost_memory=False)``);
+  * mutation — the weighted-reconstructable commit gate with its
+    distinct-assigned-holder accounting knocked down to a bare ack
+    COUNT must fail the linearizability checker: the coordinator's own
+    ack plus k-1 assignee acks satisfies the count while two partition-
+    stranded assignees hold nothing, so the stripe commits with fewer
+    than k durable shards and the origin's crash erases the only full
+    copy — tail reads of the object can never be answered. A silently
+    broken gate cannot pass this suite.
+"""
+
+from __future__ import annotations
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.coding import rs
+from repro.coding.manager import CodingManager
+from repro.core.simulator import CostModel
+from repro.faults import Crash, Heal, Partition, Recover, leader_crash, \
+    sym_partition
+from repro.scenario import (Coding, Scenario, Sharding, ValueSizesWorkload,
+                            Verification, ZipfWorkload, protocol_info,
+                            protocols_with, run_scenario)
+
+
+def _sc(**kw):
+    kw.setdefault("n_replicas", 5)
+    kw.setdefault("n_clients", 4)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("seed", 3)
+    return Scenario(**kw)
+
+
+def _op_stream(art):
+    return sorted((o.op_id, o.obj, o.kind, o.submit_time, o.commit_time,
+                   o.path, o.read_result)
+                  for c in art.clients for o in c.ops)
+
+
+def _data_heavy(reads_fraction=0.85, n_objects=48, size=1 << 18):
+    return ValueSizesWorkload(
+        base=ZipfWorkload(n_objects=n_objects, theta=0.0,
+                          reads_fraction=reads_fraction),
+        size_dist="fixed", size_small=size)
+
+
+# ---------------------------------------------------------------------------
+# Reed-Solomon codec properties (no simulator)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_rs_any_k_of_n_decode(data):
+    """Systematic RS(k, m): EVERY k-subset of the k+m shards decodes
+    back to the exact payload bytes."""
+    k = data.draw(st.integers(1, 6))
+    m = data.draw(st.integers(1, 4))
+    size = data.draw(st.integers(0, 257))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    import numpy as np
+    payload = np.random.default_rng(seed).integers(
+        0, 256, size=size, dtype=np.uint8).tobytes()
+    shards = rs.encode(payload, k, m)
+    assert len(shards) == k + m
+    assert all(len(s) == rs.shard_len(size, k) for s in shards)
+    # systematic: the k data shards are the (padded) payload itself
+    assert b"".join(shards[:k])[:size] == payload
+    # erase down to an arbitrary k-subset
+    idx = list(range(k + m))
+    rng = np.random.default_rng(seed ^ 0x5DEECE66)
+    rng.shuffle(idx)
+    subset = {i: shards[i] for i in idx[:k]}
+    assert rs.decode(subset, k, m, size) == payload
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_rs_below_k_is_unrecoverable(data):
+    k = data.draw(st.integers(2, 6))
+    m = data.draw(st.integers(1, 3))
+    shards = rs.encode(b"payload bytes " * k, k, m)
+    keep = data.draw(st.integers(0, k - 1))
+    subset = {i: shards[i] for i in range(keep)}
+    with pytest.raises(ValueError, match="unrecoverable erasure"):
+        rs.reconstruct(subset, k, m)
+
+
+def test_rs_rejects_malformed_input():
+    with pytest.raises(ValueError, match="invalid shape"):
+        rs.encode(b"x", 0, 1)
+    with pytest.raises(ValueError, match="invalid shape"):
+        rs.encode(b"x", 200, 100)          # k + m > 255 over GF(256)
+    shards = rs.encode(b"abcdef", 2, 1)
+    with pytest.raises(ValueError, match="ragged shards"):
+        rs.reconstruct({0: shards[0], 1: shards[1][:-1]}, 2, 1)
+    with pytest.raises(ValueError, match="out of range"):
+        rs.reconstruct({0: shards[0], 9: shards[1]}, 2, 1)
+
+
+def test_rs_parity_actually_used():
+    """Decoding from a subset that includes parity indices exercises
+    the Lagrange path (not just the systematic copy-out)."""
+    payload = bytes(range(250)) * 3
+    k, m = 3, 2
+    shards = rs.encode(payload, k, m)
+    subset = {0: shards[0], 3: shards[3], 4: shards[4]}
+    assert rs.decode(subset, k, m, len(payload)) == payload
+
+
+# ---------------------------------------------------------------------------
+# registry gating + spec validation
+# ---------------------------------------------------------------------------
+
+def test_registry_coding_capability():
+    assert protocols_with(coding=True) == ["woc"]
+    assert not protocol_info("paxos").coding
+    assert not protocol_info("epaxos").coding
+
+
+def test_scenario_rejects_coding_on_unsupporting_protocol():
+    with pytest.raises(ValueError, match="striping"):
+        _sc(protocol="paxos", total_ops=100, coding=Coding())
+
+
+def test_scenario_rejects_coding_on_parallel_run():
+    with pytest.raises(ValueError, match="serial"):
+        _sc(protocol="woc", total_ops=100, coding=Coding(),
+            sharding=Sharding(n_groups=2, workers=2))
+
+
+def test_scenario_rejects_bad_coding_params():
+    with pytest.raises(ValueError, match="parity"):
+        _sc(protocol="woc", total_ops=100, coding=Coding(parity=0))
+    with pytest.raises(ValueError, match="stripe_min_bytes"):
+        _sc(protocol="woc", total_ops=100,
+            coding=Coding(stripe_min_bytes=0))
+
+
+# ---------------------------------------------------------------------------
+# inertness: the default-off knob changes nothing
+# ---------------------------------------------------------------------------
+
+def test_coding_disabled_is_bit_identical():
+    """coding=None and Coding(enabled=False) lower to the same run: no
+    CodingManager is constructed and every op commits at the exact same
+    simulated instant via the exact same path."""
+    wl = _data_heavy(reads_fraction=0.5, size=1 << 16)
+    base = run_scenario(_sc(protocol="woc", total_ops=1500, workload=wl))
+    off = run_scenario(_sc(protocol="woc", total_ops=1500, workload=wl,
+                           coding=Coding(enabled=False)))
+    assert all(r.coding_mgr is None for r in off.replicas)
+    assert _op_stream(base) == _op_stream(off)
+    assert base.result.striped_frac == off.result.striped_frac == 0.0
+
+
+def test_coding_on_sizeless_workload_is_inert():
+    """A workload with no value-size axis generates op.size == 0 ops:
+    below any stripe_min_bytes floor, so the knob being ON still ships
+    every write as a classic full copy."""
+    wl = ZipfWorkload(n_objects=64, theta=0.0, reads_fraction=0.5)
+    art = run_scenario(_sc(protocol="woc", total_ops=1500, workload=wl,
+                           coding=Coding()))
+    assert art.result.striped_frac == 0.0
+    assert all(r.coding_mgr is not None for r in art.replicas)
+    assert sum(r.coding_mgr.striped for r in art.replicas) == 0
+
+
+def test_coding_small_values_never_stripe():
+    wl = _data_heavy(reads_fraction=0.5, size=256)   # < stripe_min_bytes
+    art = run_scenario(_sc(protocol="woc", total_ops=1000, workload=wl,
+                           coding=Coding()))
+    assert art.result.striped_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fault-free striping: serving, counters, linearizability
+# ---------------------------------------------------------------------------
+
+def test_fault_free_striping_serves_and_commits():
+    """Data-heavy fixed-size workload, no faults: large writes stripe,
+    every op commits, and the history linearizes. No reconstruction
+    should be needed — the origin's full copy answers every parked
+    read (decode-on-read is a degraded-mode path, exercised by the
+    twin control below)."""
+    art = run_scenario(_sc(
+        protocol="woc", total_ops=1500,
+        workload=_data_heavy(reads_fraction=0.7),
+        coding=Coding(),
+        verify=Verification(capture_history=True,
+                            check_linearizable=True)))
+    r = art.result
+    assert r.committed_ops == 1500
+    assert r.striped_frac > 0.05
+    assert sum(rep.coding_mgr.striped for rep in art.replicas) > 0
+    assert sum(rep.coding_mgr.reconstructs for rep in art.replicas) == 0
+
+
+def test_bimodal_sizes_stripe_only_the_large_mode():
+    """The adaptive policy's size floor: bimodal traffic stripes the
+    large mode only, so striped_frac lands strictly between zero and
+    the write fraction."""
+    wl = ValueSizesWorkload(
+        base=ZipfWorkload(n_objects=64, theta=0.0, reads_fraction=0.5),
+        size_dist="bimodal", size_small=256, size_large=1 << 20,
+        p_large=0.3)
+    art = run_scenario(_sc(protocol="woc", total_ops=1500, workload=wl,
+                           coding=Coding()))
+    frac = art.result.striped_frac
+    assert 0.0 < frac < 0.5 * 0.5   # < writes * p_large upper bound-ish
+
+
+# ---------------------------------------------------------------------------
+# nemesis safety: striped histories stay linearizable under faults
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faults", [
+    leader_crash(at=0.12, recover_at=0.45),
+    sym_partition(at=0.12, heal_at=0.4, side=(1,)),
+], ids=["leader_crash", "sym_partition"])
+def test_striped_history_linearizable_under_nemesis(faults):
+    art = run_scenario(_sc(
+        protocol="woc", total_ops=2000,
+        workload=_data_heavy(reads_fraction=0.85),
+        coding=Coding(), faults=faults,
+        verify=Verification(capture_history=True,
+                            check_linearizable=True)))
+    assert art.result.committed_ops == 2000
+    assert art.result.striped_frac > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the mutation twin: a count-only commit gate must fail the checker
+# ---------------------------------------------------------------------------
+
+def _twin_scenario(seed):
+    """Partition two assignees inside the heartbeat-staleness window so
+    the coordinator still assigns them shards it can no longer deliver,
+    then blink-crash the origin (under HB_TIMEOUT, so nobody else
+    isolates) to erase the only full copies, and heal. The honest gate
+    refuses to commit the stranded stripes (their waits die with the
+    origin and the clients re-drive them as full copies); the count-only
+    gate commits them with fewer than k durable shards and the tail
+    reads can never be answered."""
+    return _sc(
+        protocol="woc", total_ops=3000, seed=seed,
+        workload=_data_heavy(reads_fraction=0.85),
+        coding=Coding(),
+        faults=(Partition(0.33, (3, 4), symmetric=True),
+                Crash(0.40, 0), Recover(0.43, 0), Heal(0.46)),
+        verify=Verification(capture_history=True,
+                            check_linearizable=True))
+
+
+def test_twin_control_honest_gate_survives_the_schedule():
+    """The honest gate under the exact twin schedule: every op commits
+    and the history linearizes. This is the control that makes the
+    mutated run's failure meaningful — and the regression pin for the
+    isolation-rejoin shard-wipe hole (healed partition sides must keep
+    their committed shard holdings)."""
+    art = run_scenario(_twin_scenario(seed=3))
+    assert art.result.committed_ops == 3000
+    assert art.result.striped_frac > 0.05
+    # the origin blink forces degraded-mode serving: survivors decode
+    # committed values back out of their shards
+    assert sum(rep.coding_mgr.reconstructs for rep in art.replicas) > 0
+
+
+def test_count_only_commit_gate_fails_the_checker(monkeypatch):
+    """Replace distinct-assigned-holder accounting with a bare ack
+    count (the coordinator's self-ack included, as the round replier
+    set always is) and the gate commits stripes whose shards were never
+    delivered — which the checker must catch as unanswerable reads."""
+    monkeypatch.setattr(
+        CodingManager, "_rec_satisfied",
+        lambda self, rec, acked: len(acked) >= rec["need"])
+    with pytest.raises(AssertionError, match="not linearizable"):
+        run_scenario(_twin_scenario(seed=3))
+
+
+def test_retry_heavy_striping_stays_linearizable():
+    """Regression pin for two holes the retry storm at large value
+    sizes opened fault-free (found driving the bench cost model at
+    off-bench seeds):
+
+      * seed 11 / 64 KiB — a read of a striped object committed in the
+        engine's final instants parked at its coordinator and lost
+        every stamp source to the shutdown; the end-of-run drain
+        (``repro.coding.drain_pending_reads``) must flush it because
+        the stripe is still reconstructable cluster-wide.
+      * seed 12 / 256 KiB — a client-retried write re-striped under a
+        later plan whose propose wave displaced ``announced`` recs
+        everywhere; when the EARLIER plan's gate then committed, even
+        its origin installed an empty-shard rec and the stripe had no
+        shards anywhere. ``note_striped_commit`` must fall back to the
+        origin's ``sent`` rec when its geometry matches the marker.
+
+    Both anomalies surfaced as a committed write followed by a read
+    returning None — stale-initial-value reads the checker rejects.
+    """
+    for seed, size in ((11, 1 << 16), (12, 1 << 18)):
+        r = run_scenario(_sc(
+            total_ops=2000, seed=seed,
+            costs=CostModel(c_byte_wire=4e-9),
+            workload=ValueSizesWorkload(
+                base=ZipfWorkload(n_objects=256, theta=0.0,
+                                  reads_fraction=0.5),
+                size_dist="fixed", size_small=size),
+            coding=Coding(),
+            verify=Verification(capture_history=True,
+                                check_linearizable=True))).result
+        assert r.committed_ops == 2000, (seed, size, r.committed_ops)
+        assert r.striped_frac > 0.3, (seed, size, r.striped_frac)

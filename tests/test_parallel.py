@@ -120,6 +120,46 @@ def test_lookahead_is_min_cross_group_delay():
     assert lookahead_of(tight) > 0
 
 
+def test_lookahead_is_zero_byte_conservative():
+    """PDES safety pin for the payload-size axis (repro.coding): the
+    per-byte cost terms (c_byte_wire x size_bytes, bandwidth serialization)
+    only ADD delay on top of a message's base latency — a zero-byte
+    (metadata-only) message pays none of them. The conservative window
+    must therefore remain the zero-byte minimum: a cost model with byte
+    terms configured yields EXACTLY the same lookahead as one without,
+    anything larger could admit a small cross-group frame early."""
+    plain = CostModel()
+    heavy = CostModel(c_byte_wire=2e-9, c_byte_parse=1e-9,
+                      link_bw=(1.0, 10.0))
+    assert lookahead_of(heavy) == lookahead_of(plain)
+    assert lookahead_of(heavy, allow_steal=False) \
+        == lookahead_of(plain, allow_steal=False)
+    # and it is still the documented closed form of the base terms only
+    assert lookahead_of(heavy) == min(heavy.net_base + heavy.net_cross,
+                                      heavy.net_client
+                                      + heavy.net_remote_client)
+
+
+def test_parallel_matches_serial_mixed_value_sizes():
+    """Serial <-> parallel bit-identity with the value-size workload axis
+    and per-byte costs live: big frames serialize onto links and charge
+    wire/parse time, yet every boundary message still respects the
+    zero-byte lookahead, so window sync stays conservative. (The Coding
+    knob itself is serial-only by validation; what must hold here is
+    that SIZED traffic — the data-heavy regime coding decides over —
+    cannot break the parallel contract.)"""
+    from repro.scenario import ValueSizesWorkload
+    wl = ValueSizesWorkload(size_dist="bimodal", size_small=256,
+                            size_large=1 << 20, p_large=0.15)
+    serial, parallel = _pair(
+        n_groups=2, n_replicas_per_group=3, total_ops=1200, batch_size=10,
+        locality="mixed", seed=11, workload=wl,
+        costs=CostModel(c_byte_wire=4e-10, c_byte_parse=2e-10,
+                        link_bw=(1.0, 1.5, 2.0)))
+    assert serial.result.makespan_s > 0
+    assert _metrics(serial.result) == _metrics(parallel.result)
+
+
 def test_parallel_matches_serial_stealing_disabled_wide_window():
     """steal_threshold=0 runs with the wider client-WAN lookahead; the
     contract must hold there too (fewer, larger windows)."""
